@@ -1,0 +1,20 @@
+"""Shared benchmark helpers. Every benchmark prints `name,us_per_call,derived`
+CSV rows via `emit`."""
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    dt = (time.perf_counter() - t0) / iters
+    return dt, out
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,86 @@
+"""Roofline table builder: reads dry-run JSONL results and renders the
+per-(arch x shape) three-term table for EXPERIMENTS.md §Roofline."""
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = [
+    ("single", "results/dryrun_single.jsonl"),
+    ("multi", "results/dryrun_multi.jsonl"),
+]
+
+
+def load(path):
+    rows = {}
+    if not os.path.exists(path):
+        return rows
+    for line in open(path):
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        rows[(r["arch"], r["shape"])] = r  # later lines win (reruns)
+    return rows
+
+
+def fmt_row(r):
+    rf = r.get("roofline", {})
+    pd = r.get("per_device", {})
+    dom = rf.get("bottleneck", "-")
+    terms = {k: rf.get(k, 0.0) for k in ("compute_s", "memory_s", "collective_s")}
+    peak = max(terms.values()) if terms else 0
+    frac = terms.get("compute_s", 0) / peak if peak else 0
+    return (
+        f"{r['arch']:18s} {r['shape']:11s} {r['status']:7s} "
+        f"cmp={terms['compute_s']:9.3f} mem={terms['memory_s']:9.3f} "
+        f"col={terms['collective_s']:9.3f} dom={dom:10s} "
+        f"peakGB={pd.get('peak_bytes', 0)/2**30:8.1f} "
+        f"useful={r.get('useful_flops_ratio') or 0:.3f} "
+        f"rl_frac={frac:.3f}"
+    )
+
+
+def markdown_table(rows):
+    hdr = ("| arch | shape | status | compute_s | memory_s | collective_s | "
+           "bottleneck | peak GB/dev | MODEL/HLO flops | roofline frac |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for (a, s), r in sorted(rows.items()):
+        rf = r.get("roofline", {})
+        pd = r.get("per_device", {})
+        terms = [rf.get(k) for k in ("compute_s", "memory_s", "collective_s")]
+        if r["status"] != "ok":
+            lines.append(f"| {a} | {s} | {r['status']} | - | - | - | - | - | - | - |")
+            continue
+        peak = max(t for t in terms if t is not None)
+        frac = (terms[0] / peak) if peak else 0
+        lines.append(
+            f"| {a} | {s} | ok | {terms[0]:.3f} | {terms[1]:.3f} | {terms[2]:.3f} "
+            f"| {rf.get('bottleneck')} | {pd.get('peak_bytes',0)/2**30:.1f} "
+            f"| {r.get('useful_flops_ratio') or 0:.3f} | {frac:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def run():
+    for mesh_name, path in RESULTS:
+        rows = load(path)
+        ok = sum(1 for r in rows.values() if r["status"] == "ok")
+        skipped = sum(1 for r in rows.values() if r["status"] == "skipped")
+        err = sum(1 for r in rows.values() if r["status"] == "error")
+        emit(f"roofline.{mesh_name}_cells", 0, f"ok={ok};skipped={skipped};error={err}")
+        for (a, s), r in sorted(rows.items()):
+            if r["status"] == "ok":
+                rf = r["roofline"]
+                emit(f"roofline.{mesh_name}.{a}.{s}", 0,
+                     f"dom={rf['bottleneck']};cmp={rf['compute_s']:.3f};"
+                     f"mem={rf['memory_s']:.3f};col={rf['collective_s']:.3f}")
+
+
+if __name__ == "__main__":
+    for name, path in RESULTS:
+        rows = load(path)
+        if rows:
+            print(f"==== {name} ====")
+            print(markdown_table(rows))

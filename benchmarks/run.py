@@ -1,0 +1,40 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see each module's docstring for
+what it reproduces and the paper's claim it is checked against).
+"""
+import sys
+import time
+import traceback
+
+MODULES = [
+    "tab1_alu_cost",
+    "fig7_gradient_ratio",
+    "fig8_error_dist",
+    "fig9_convergence",
+    "fig10_goodput",
+    "fig11_e2e_speedup",
+    "fig13_queries",
+    "tab3_resource_util",
+    "roofline",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    only = sys.argv[1:] or None
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+            print(f"{name}.wall,{(time.time()-t0)*1e6:.0f},ok")
+        except Exception as e:  # noqa: BLE001 — report, keep going
+            traceback.print_exc()
+            print(f"{name}.wall,{(time.time()-t0)*1e6:.0f},ERROR:{type(e).__name__}")
+
+
+if __name__ == "__main__":
+    main()

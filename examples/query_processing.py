@@ -1,0 +1,45 @@
+"""Distributed FP query processing with in-switch FPISA operators (paper
+Sec. 6): Top-N pruning and group-by aggregation on a Big-Data-bench-like
+uservisits table, vs a Spark-like full-scan baseline.
+
+Run:  PYTHONPATH=src python examples/query_processing.py
+"""
+import time
+
+import numpy as np
+
+from repro.db import query as q
+
+
+def main():
+    rng = np.random.default_rng(1)
+    rows = 100_000
+    ad_revenue = rng.gamma(2.0, 50.0, rows).astype(np.float32)
+    country = rng.integers(0, 32, rows)
+
+    print(f"uservisits: {rows:,} rows, FP32 adRevenue column\n")
+
+    # SELECT TOP 10 adRevenue  (in-switch pruning, FPISA comparison)
+    t0 = time.time()
+    pruner = q.TopNPruner(n=10)
+    surv = pruner.run(ad_revenue, batch=4096)
+    top10 = np.sort(ad_revenue[surv])[::-1][:10]
+    t_sw = time.time() - t0
+    exact = q.spark_like_topn(ad_revenue, 10)
+    assert np.array_equal(top10, exact)
+    print(f"Top-10: switch pruned {pruner.stats.prune_rate:.1%} of the stream "
+          f"({pruner.stats.rows_out:,} rows reached the master) — exact result")
+
+    # SELECT country, SUM(adRevenue) GROUP BY country (in-switch aggregation)
+    sub = slice(0, 20000)
+    agg = q.GroupBySum(num_slots=32, variant="full")
+    got = agg.run(country[sub], ad_revenue[sub])
+    exact_g = q.spark_like_groupby(country[sub], ad_revenue[sub])
+    worst = max(abs(got[k] - v) / v for k, v in exact_g.items())
+    print(f"Group-by SUM: only {agg.stats.rows_out} aggregates left the switch "
+          f"(from {agg.stats.rows_in:,} rows); worst rel err {worst:.2e}")
+    print("\npaper claim: 1.9-2.7x over Spark from exactly this data reduction")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: FPISA in 60 seconds.
+
+1. Encode a gradient tensor into switch-register integer planes.
+2. Aggregate 8 workers three ways: exact float, bit-faithful FPISA-A (switch
+   arrival semantics), and the production block-integer path (order-invariant).
+3. Show the paper's headline numerics: tiny error, bounded overwrite events,
+   bit-exact reproducibility for the production path.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import fpisa as F
+from repro.core import numerics as nx
+
+rng = np.random.default_rng(0)
+W, N = 8, 1 << 16
+grads = (rng.standard_normal((W, N)) * 0.01).astype(np.float32)
+
+# --- 1. the representation (paper Fig. 3) ---
+planes = F.encode(jnp.asarray(grads[0]))
+print(f"FP32 value {grads[0,0]:+.6f} -> exp={int(planes.exp[0])} "
+      f"man={int(planes.man[0])} (two's-complement, 7 headroom bits)")
+roundtrip = F.renormalize(planes)
+assert np.array_equal(np.asarray(roundtrip), grads[0])
+print("encode -> delayed-renormalize roundtrip: bit-exact")
+
+# --- 2. aggregation three ways ---
+exact = grads.astype(np.float64).sum(0)
+
+seq, stats = F.fpisa_sum_sequential(jnp.asarray(grads), return_stats=True)
+err = np.abs(np.asarray(seq, np.float64) - exact)
+print(f"\nFPISA-A (switch arrival order): p50 err {np.quantile(err,0.5):.2e}, "
+      f"p99 {np.quantile(err,0.99):.2e}, overwrites {int(stats['overwrite'])} "
+      f"of {W*N} adds (paper: rare, <0.9%)")
+
+# production block-integer path (what the training framework uses)
+p = F.encode(jnp.asarray(grads).reshape(-1))
+pe = p.exp.reshape(W, N)
+bmax = jnp.max(F.block_max_exponent(pe, 256), axis=0)  # "pmax across workers"
+s = nx.required_preshift(W)
+man = jnp.stack([F.block_encode(jnp.asarray(grads[w]), bmax, 256, s) for w in range(W)])
+man_sum = man.sum(0)  # "integer psum" — associative, reproducible
+out = F.block_decode(man_sum, bmax, 256, s)
+err2 = np.abs(np.asarray(out, np.float64) - exact)
+print(f"FPISA block-integer psum:       p99 err {np.quantile(err2,0.99):.2e}")
+
+perm = rng.permutation(W)
+man_sum2 = man[perm].sum(0)
+out2 = F.block_decode(man_sum2, bmax, 256, s)
+print("permutation-invariant bit-exact:", bool(jnp.all(out == out2)),
+      "(float sums are NOT — this is the production win)")

@@ -1,0 +1,44 @@
+"""Architecture config registry: ``get_config(name)`` / ``list_configs()``.
+
+Each assigned architecture has a module defining ``CONFIG`` (the exact
+published configuration) and ``SMOKE`` (a reduced same-family config for CPU
+smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+
+ARCH_MODULES = {
+    "qwen1.5-0.5b": "qwen15_0_5b",
+    "internlm2-20b": "internlm2_20b",
+    "deepseek-67b": "deepseek_67b",
+    "stablelm-3b": "stablelm_3b",
+    "arctic-480b": "arctic_480b",
+    "kimi-k2-1t-a32b": "kimi_k2",
+    "zamba2-7b": "zamba2_7b",
+    "llava-next-34b": "llava_next_34b",
+    "whisper-medium": "whisper_medium",
+    "mamba2-780m": "mamba2_780m",
+}
+
+ARCH_NAMES = list(ARCH_MODULES)
+
+
+def _module(name: str):
+    if name not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    return importlib.import_module(f"repro.configs.{ARCH_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).SMOKE
+
+
+def list_configs():
+    return {n: get_config(n) for n in ARCH_NAMES}

@@ -1,0 +1,303 @@
+"""Gradient-aggregation strategies (the paper's technique as a collective).
+
+The switch in the paper sits at the aggregation point between workers. On a
+TPU fleet the analogous boundary is the data-parallel replica axis (and, on a
+multi-pod mesh, the cross-pod hop — the expensive link where an in-network
+aggregator would physically sit). All strategies here operate *inside*
+``shard_map`` over the replica axes (manual collectives), with the model/TP
+axes left automatic.
+
+Strategies
+----------
+native     : plain float psum — the no-switch baseline.
+switchml   : SwitchML (Sapio et al., NSDI'21) reimplementation: per-chunk
+             max-exponent round trip (collective #1), int32 fixed-point
+             quantize -> int psum (collective #2) -> dequantize. This is the
+             baseline the paper improves on.
+fpisa      : the paper's technique adapted to TPU: block-exponent planes,
+             mantissas aligned with worker-count pre-shift, ONE int32 psum +
+             one tiny int32 pmax, delayed renormalization after the collective.
+             Bit-reproducible for any reduction order/topology (int add is
+             associative + commutative).
+fpisa_seq  : bit-faithful switch-arrival semantics (sequential FPISA-A over
+             the worker axis via all_gather + scan). Used by accuracy
+             experiments; not a production path (W x bytes on the wire).
+
+Options
+-------
+wire_bits  : 32 (default), 16 or 8 — beyond-paper compression: mantissas are
+             truncated to the requested element width before the reduction
+             (error bound widens by the extra shift; see DESIGN.md §2).
+hierarchical: on a multi-pod mesh, reduce-scatter in-pod over `data`, psum
+             across `pod`, all-gather in-pod — lets the cross-pod hop use a
+             narrower wire than the in-pod hop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import fpisa
+from repro.core import numerics as nx
+
+DEFAULT_BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class AggConfig:
+    strategy: str = "fpisa"  # native | switchml | fpisa | fpisa_seq
+    block: int = DEFAULT_BLOCK
+    wire_bits: int = 32
+    fmt_name: str = "fp32"
+    # wire bits for the cross-pod hop when hierarchical (defaults to wire_bits)
+    pod_wire_bits: int | None = None
+    # process the flattened gradient in chunks of this many elements (scan):
+    # bounds the transient f32/int32 plane memory to O(chunk) instead of
+    # O(total params) — a 20B-param model otherwise materializes ~160 GB of
+    # planes. 0 disables chunking. Chunking also matches the switch reality:
+    # aggregation is streamed per-packet, never whole-tensor.
+    chunk_elems: int = 0
+
+    @property
+    def fmt(self) -> fpisa.FpFormat:
+        return fpisa.FORMATS[self.fmt_name]
+
+
+def _axis_size(axis_names: Sequence[str]) -> int:
+    return math.prod(lax.axis_size(a) for a in axis_names)
+
+
+def _flatten_pad(x: jax.Array, block: int):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+def _unflatten(flat: jax.Array, pad: int, shape, dtype):
+    if pad:
+        flat = flat[: flat.shape[0] - pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# native
+# ---------------------------------------------------------------------------
+
+
+def native_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
+    return lax.psum(x, tuple(axis_names))
+
+
+# ---------------------------------------------------------------------------
+# SwitchML baseline
+# ---------------------------------------------------------------------------
+
+
+def switchml_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
+    """Fixed-point aggregation with a per-chunk scale-factor round trip.
+
+    Mirrors SwitchML's host logic: chunk c uses scale 2^(man_bits) / 2^e_max(c)
+    where e_max is agreed via a *separate collective round* (the overhead FPISA
+    eliminates). Values are quantized to ints, int-psum'd, dequantized.
+    """
+    axes = tuple(axis_names)
+    w = _axis_size(axes)
+    fmt = cfg.fmt
+    orig_shape, orig_dtype = x.shape, x.dtype
+    flat, pad = _flatten_pad(x.astype(jnp.float32), cfg.block)
+
+    planes = fpisa.encode(flat, fmt)
+    local_bmax = fpisa.block_max_exponent(planes.exp, cfg.block)
+    # ---- round 1: max-exponent agreement (extra RTT in SwitchML) ----
+    bmax = lax.pmax(local_bmax, axes)
+
+    # quantize: x / 2^(bmax - bias) * 2^(man_bits - s); s guards the int32 sum
+    s = nx.required_preshift(w, fmt)
+    be = jnp.repeat(bmax, cfg.block, axis=-1)
+    scale = jnp.exp2((fmt.man_bits - s) - (be - fmt.bias).astype(jnp.float32))
+    q = jnp.round(flat * scale).astype(jnp.int32)
+    # ---- round 2: integer aggregation (the in-switch op) ----
+    qsum = lax.psum(q, axes)
+    out = qsum.astype(jnp.float32) / scale
+    return _unflatten(out, pad, orig_shape, orig_dtype)
+
+
+# ---------------------------------------------------------------------------
+# FPISA production path
+# ---------------------------------------------------------------------------
+
+
+def _wire_shift(fmt: fpisa.FpFormat, w: int, wire_bits: int) -> int:
+    """Extra right-shift so each aligned mantissa fits in `wire_bits` signed
+    ints AND the integer sum over w workers cannot overflow the wire dtype
+    during an associative reduction."""
+    s = nx.required_preshift(w, fmt)
+    if wire_bits >= 32:
+        return s
+    # element magnitude < 2^(man_bits + 1 - total_shift); need the *sum* to fit:
+    # w * 2^(man_bits + 1 - t) <= 2^(wire_bits - 1)
+    t = fmt.man_bits + 1 + math.ceil(math.log2(max(w, 1))) - (wire_bits - 1)
+    return max(s, t)
+
+
+_PACKED = {"fp32": jnp.float32, "fp16": jnp.float16, "bf16": jnp.bfloat16}
+
+
+def fpisa_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
+    """The paper's aggregation mapped to TPU collectives (see module doc).
+
+    The input is handled in the *format's* packed dtype — aggregating bf16
+    gradients with ``fmt_name='bf16'`` never materializes an f32 copy and
+    its mantissa planes fit int16 natively (9-bit magnitude + headroom)."""
+    axes = tuple(axis_names)
+    w = _axis_size(axes)
+    fmt = cfg.fmt
+    orig_shape, orig_dtype = x.shape, x.dtype
+    flat, pad = _flatten_pad(x.astype(_PACKED[cfg.fmt_name]), cfg.block)
+
+    planes = fpisa.encode(flat, fmt)  # single encode: exp+man planes
+    local_bmax = fpisa.block_max_exponent(planes.exp, cfg.block)
+    # Tiny collective: one int per block (1/block of the data, and it can ride
+    # in int8 on real hardware). Unlike SwitchML this is NOT a host round trip;
+    # it pipelines with the mantissa pass chunk-by-chunk.
+    bmax = lax.pmax(local_bmax, axes)
+
+    shift = _wire_shift(fmt, w, cfg.wire_bits)
+    be = jnp.repeat(bmax, cfg.block, axis=-1)
+    man = nx.arshift(planes.man, (be - planes.exp) + shift)
+    if cfg.wire_bits == 16:
+        man = man.astype(jnp.int16)
+    elif cfg.wire_bits == 8:
+        man = man.astype(jnp.int8)
+    man_sum = lax.psum(man, axes)
+    out = fpisa.block_decode(man_sum.astype(jnp.int32), bmax, cfg.block, shift, fmt)
+    return _unflatten(out, pad, orig_shape, orig_dtype)
+
+
+def fpisa_allreduce_hierarchical(
+    x: jax.Array,
+    data_axis: str,
+    pod_axis: str,
+    cfg: AggConfig,
+):
+    """Two-level FPISA aggregation for the multi-pod mesh.
+
+    In-pod (ICI, cheap): reduce_scatter int32 mantissas over `data`.
+    Cross-pod (DCI, expensive): psum over `pod`, optionally narrower wire.
+    In-pod: all_gather the renormalized result.
+    Exponent agreement is global (pmax over both axes) so mantissa scales are
+    compatible across levels; the sum stays in integer domain end-to-end and
+    renormalization happens ONCE (delayed, as in the paper).
+    """
+    w_data = lax.axis_size(data_axis)
+    w_pod = lax.axis_size(pod_axis)
+    w = w_data * w_pod
+    fmt = cfg.fmt
+    orig_shape, orig_dtype = x.shape, x.dtype
+    # pad to block * w_data so reduce_scatter tiles evenly
+    quantum = cfg.block * w_data
+    flat = x.reshape(-1).astype(_PACKED[cfg.fmt_name])
+    pad = (-flat.shape[0]) % quantum
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+
+    planes = fpisa.encode(flat, fmt)
+    local_bmax = fpisa.block_max_exponent(planes.exp, cfg.block)
+    bmax = lax.pmax(local_bmax, (data_axis, pod_axis))
+
+    shift = _wire_shift(fmt, w, cfg.wire_bits)
+    be = jnp.repeat(bmax, cfg.block, axis=-1)
+    man = nx.arshift(planes.man, (be - planes.exp) + shift)
+
+    # level 1: in-pod reduce-scatter (int32 wire on ICI)
+    man_shard = lax.psum_scatter(man, data_axis, scatter_dimension=0, tiled=True)
+    # level 2: cross-pod integer psum, optionally narrow wire. The in-pod
+    # partial sums carry up to man_bits+1+log2(w_data) magnitude bits; a
+    # narrower cross-pod wire requires one extra truncating shift, applied
+    # ONCE, after the full-precision in-pod reduction (optimal ordering:
+    # precision is only given up on the expensive hop).
+    pod_bits = cfg.pod_wire_bits or cfg.wire_bits
+    pod_shift = 0
+    if pod_bits < 32:
+        partial_mag_bits = (fmt.man_bits + 1 - shift) + math.ceil(math.log2(max(w_data, 1)))
+        pod_shift = max(0, partial_mag_bits + math.ceil(math.log2(max(w_pod, 1))) - (pod_bits - 1))
+        man_shard = nx.arshift(man_shard, pod_shift)
+        if pod_bits == 16:
+            man_shard = man_shard.astype(jnp.int16)
+        elif pod_bits == 8:
+            man_shard = man_shard.astype(jnp.int8)
+    man_shard = lax.psum(man_shard, pod_axis).astype(jnp.int32)
+    # delayed renorm on the owned shard only, then gather packed FP32
+    nblk = man.shape[0] // cfg.block
+    idx = lax.axis_index(data_axis)
+    blocks_per_shard = nblk // w_data
+    bmax_shard = lax.dynamic_slice_in_dim(bmax, idx * blocks_per_shard, blocks_per_shard)
+    out_shard = fpisa.block_decode(man_shard, bmax_shard, cfg.block, shift + pod_shift, fmt)
+    out = lax.all_gather(out_shard, data_axis, axis=0, tiled=True)
+    return _unflatten(out, pad, orig_shape, orig_dtype)
+
+
+# ---------------------------------------------------------------------------
+# bit-faithful sequential variant (accuracy experiments)
+# ---------------------------------------------------------------------------
+
+
+def fpisa_seq_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
+    axes = tuple(axis_names)
+    stacked = lax.all_gather(x.astype(jnp.float32).reshape(-1), axes)
+    stacked = stacked.reshape(-1, x.size)
+    out = fpisa.fpisa_sum_sequential(stacked, cfg.fmt, variant="fpisa_a")
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+STRATEGIES = {
+    "native": native_allreduce,
+    "switchml": switchml_allreduce,
+    "fpisa": fpisa_allreduce,
+    "fpisa_seq": fpisa_seq_allreduce,
+}
+
+
+def allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
+    """Aggregate ``x`` over the named (manual/shard_map) mesh axes."""
+    if cfg.chunk_elems and cfg.strategy != "native" and x.size > cfg.chunk_elems:
+        return _chunked_allreduce(x, axis_names, cfg)
+    if cfg.strategy == "fpisa" and len(axis_names) == 2:
+        pod_axis, data_axis = axis_names[0], axis_names[1]
+        return fpisa_allreduce_hierarchical(x, data_axis, pod_axis, cfg)
+    return STRATEGIES[cfg.strategy](x, tuple(axis_names), cfg)
+
+
+def _chunked_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
+    """Stream the aggregation through fixed-size chunks (lax.scan) so the
+    integer planes of only ONE chunk are live at a time."""
+    inner = dataclasses.replace(cfg, chunk_elems=0)
+    orig_shape, orig_dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % cfg.chunk_elems
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(-1, cfg.chunk_elems)
+
+    def body(_, c):
+        return None, allreduce(c, axis_names, inner).astype(orig_dtype)
+
+    _, out = lax.scan(body, None, chunks)
+    out = out.reshape(-1)
+    if pad:
+        out = out[:-pad]
+    return out.reshape(orig_shape).astype(orig_dtype)
+
+
+def allreduce_tree(tree, axis_names: Sequence[str], cfg: AggConfig):
+    """Aggregate every leaf of a gradient pytree (bucketed per-leaf so XLA's
+    latency-hiding scheduler can overlap collectives with other work)."""
+    return jax.tree_util.tree_map(lambda g: allreduce(g, axis_names, cfg), tree)

@@ -1,0 +1,124 @@
+"""Shared bit-level numerics for FPISA.
+
+Everything here is pure jnp, shape-polymorphic, and safe inside Pallas kernel
+bodies (interpret or compiled) as well as in plain jitted code.
+
+FP32 layout reminder: [sign:1][exp:8 bias 127][mantissa:23 implied-1].
+FPISA stores a value as (exp: int32 in [0,255], man: int32 two's-complement,
+24-bit magnitude right-aligned => 7 headroom bits + sign bit).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+FP32_EXP_BITS = 8
+FP32_MAN_BITS = 23
+FP32_EXP_BIAS = 127
+FP32_EXP_MASK = (1 << FP32_EXP_BITS) - 1          # 0xFF
+FP32_MAN_MASK = (1 << FP32_MAN_BITS) - 1          # 0x7FFFFF
+FP32_IMPLIED_ONE = 1 << FP32_MAN_BITS             # 0x800000
+# Headroom bits left of the 24-bit magnitude in an int32 register (excl. sign).
+FP32_HEADROOM = 31 - (FP32_MAN_BITS + 1)          # 7
+
+
+@dataclasses.dataclass(frozen=True)
+class FpFormat:
+    """A packed IEEE-like floating point format handled by FPISA."""
+
+    name: str
+    exp_bits: int
+    man_bits: int
+    # register width used for the signed mantissa plane
+    reg_bits: int = 32
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def exp_mask(self) -> int:
+        return (1 << self.exp_bits) - 1
+
+    @property
+    def man_mask(self) -> int:
+        return (1 << self.man_bits) - 1
+
+    @property
+    def implied_one(self) -> int:
+        return 1 << self.man_bits
+
+    @property
+    def headroom(self) -> int:
+        # sign bit occupies the top of the register
+        return self.reg_bits - 1 - (self.man_bits + 1)
+
+    @property
+    def total_bits(self) -> int:
+        return 1 + self.exp_bits + self.man_bits
+
+
+FP32 = FpFormat("fp32", exp_bits=8, man_bits=23)
+FP16 = FpFormat("fp16", exp_bits=5, man_bits=10)
+BF16 = FpFormat("bf16", exp_bits=8, man_bits=7)
+
+FORMATS = {f.name: f for f in (FP32, FP16, BF16)}
+
+
+def bitcast_f32_to_i32(x):
+    return jnp.asarray(x, jnp.float32).view(jnp.int32)
+
+
+def bitcast_i32_to_f32(x):
+    return jnp.asarray(x, jnp.int32).view(jnp.float32)
+
+
+def clz32(x):
+    """Branchless count-leading-zeros for int32/uint32 (vectorized).
+
+    This is the software analogue of the paper's TCAM longest-prefix-match
+    table (Fig. 5): a 5-step binary search over the bit positions.
+    Returns 32 for x == 0.
+    """
+    x = jnp.asarray(x).astype(jnp.uint32)
+    n = jnp.full(x.shape, 0, jnp.int32)
+    for shift in (16, 8, 4, 2, 1):
+        big = (x >> shift) != 0
+        n = jnp.where(big, n + shift, n)
+        x = jnp.where(big, x >> shift, x)
+    # x now holds the top set bit (0 or 1)
+    n = jnp.where(x != 0, n, -1)  # n = floor(log2(x)); -1 for zero
+    return jnp.asarray(31 - n, jnp.int32)  # clz; 32 when x == 0
+
+
+def floor_log2_u32(x):
+    """floor(log2(x)) for x > 0 (int32 result); -1 for x == 0."""
+    return jnp.asarray(31, jnp.int32) - clz32(x)
+
+
+def arshift(x, s):
+    """Arithmetic right shift with clamped, possibly-vector shift distance.
+
+    Shifting an int32 by >= 32 is UB in XLA; clamp to 31 which preserves the
+    round-toward-negative-infinity semantics of two's-complement shifts
+    (positive -> 0, negative -> -1).
+    """
+    s = jnp.clip(jnp.asarray(s, jnp.int32), 0, 31)
+    return jnp.right_shift(jnp.asarray(x, jnp.int32), s)
+
+
+def lshift(x, s):
+    s = jnp.clip(jnp.asarray(s, jnp.int32), 0, 31)
+    return jnp.left_shift(jnp.asarray(x, jnp.int32), s)
+
+
+def required_preshift(num_workers: int, fmt: FpFormat = FP32) -> int:
+    """Right-shift applied to every aligned mantissa before an integer
+    reduction over `num_workers` contributions so the int32 accumulator can
+    never overflow: |m| < 2^(man_bits+1), sum < W * 2^(man_bits+1-s) must be
+    < 2^(reg_bits-1)."""
+    import math
+
+    need = max(0, math.ceil(math.log2(max(num_workers, 1))) - fmt.headroom)
+    return need

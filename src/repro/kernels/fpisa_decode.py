@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: FPISA delayed renormalization + assembly (post-collective).
+
+The egress-pipeline stage of the paper (Sec. 3.2 "Renormalize and Assemble"):
+count leading zeros (the TCAM-LPM analogue is a 5-step branchless binary
+search on the VPU), shift the two's-complement mantissa (round-to--inf),
+adjust the exponent, pack to IEEE bits. One VMEM pass, no MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import fpisa
+from repro.kernels.fpisa_encode import TILE_R
+
+
+def _decode_kernel(man_ref, bmax_ref, out_ref, *, preshift: int, fmt: fpisa.FpFormat):
+    man = man_ref[...]
+    e = jnp.broadcast_to(bmax_ref[...] + preshift, man.shape)  # (TILE_R,1) -> tile
+    out = fpisa.renormalize(fpisa.Planes(exp=e, man=man), fmt)
+    out_ref[...] = out.astype(jnp.float32) if fmt.name == "fp32" else out
+
+
+@functools.partial(jax.jit, static_argnames=("preshift", "fmt_name", "interpret"))
+def fpisa_decode(
+    man_sum: jax.Array,
+    bmax: jax.Array,
+    preshift: int = 0,
+    fmt_name: str = "fp32",
+    interpret: bool = False,
+):
+    """(R,B) i32 aggregated mantissas + (R,) block exps -> (R,B) packed FP."""
+    fmt = fpisa.FORMATS[fmt_name]
+    r, b = man_sum.shape
+    tile_r = min(TILE_R, r)
+    grid = (pl.cdiv(r, tile_r),)
+    out_dtype = {"fp32": jnp.float32, "fp16": jnp.float16, "bf16": jnp.bfloat16}[fmt_name]
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, preshift=preshift, fmt=fmt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, b), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, b), out_dtype),
+        interpret=interpret,
+    )(man_sum, bmax[:, None])

@@ -1,0 +1,49 @@
+"""Public jit'd wrappers for the FPISA Pallas kernels.
+
+On a CPU host (this container) the kernels execute in Pallas interpret mode —
+the kernel bodies run exactly as written, validating the TPU code path; on a
+real TPU backend the same calls compile to Mosaic. `use_pallas=False` routes
+to the pure-jnp oracles (ref.py), which XLA fuses well — that is the default
+inside the big jitted train step so the dry-run HLO stays portable, while the
+kernels are exercised by tests/benchmarks and available for the TPU hot path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fpisa
+from repro.kernels import ref
+from repro.kernels.fpisa_accum import fpisa_accum
+from repro.kernels.fpisa_decode import fpisa_decode
+from repro.kernels.fpisa_encode import fpisa_align, fpisa_extract
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def extract(x: jax.Array, fmt_name: str = "fp32", use_pallas: bool = True):
+    if not use_pallas:
+        return ref.extract_ref(x, fpisa.FORMATS[fmt_name])
+    return fpisa_extract(x, fmt_name=fmt_name, interpret=_on_cpu())
+
+
+def align(exp, man, bmax, preshift: int = 0, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.align_ref(exp, man, bmax, preshift)
+    return fpisa_align(exp, man, bmax, preshift=preshift, interpret=_on_cpu())
+
+
+def decode(man_sum, bmax, preshift: int = 0, fmt_name: str = "fp32", use_pallas: bool = True):
+    if not use_pallas:
+        return ref.decode_ref(man_sum, bmax, preshift)
+    return fpisa_decode(man_sum, bmax, preshift=preshift, fmt_name=fmt_name, interpret=_on_cpu())
+
+
+def accum(x, variant: str = "fpisa_a", fmt_name: str = "fp32", use_pallas: bool = True):
+    if not use_pallas:
+        return ref.accum_ref(x, variant=variant)
+    return fpisa_accum(x, variant=variant, fmt_name=fmt_name, interpret=_on_cpu())

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (shape/dtype
+sweeps in tests/test_kernels.py). They intentionally reuse repro.core.fpisa —
+the kernels must match the core semantics bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fpisa
+from repro.core import numerics as nx
+
+
+def extract_ref(x: jax.Array, fmt: fpisa.FpFormat = fpisa.FP32):
+    """x: (R, B) packed FP -> (exp (R,B) i32, man (R,B) i32, bmax (R,) i32).
+
+    bmax is the per-row (= per-block) max exponent — the quantity that gets
+    pmax'd across workers before alignment.
+    """
+    planes = fpisa.encode(x, fmt)
+    bmax = jnp.max(planes.exp, axis=-1)
+    return planes.exp, planes.man, bmax
+
+
+def align_ref(
+    exp: jax.Array,
+    man: jax.Array,
+    bmax: jax.Array,
+    preshift: int,
+    fmt: fpisa.FpFormat = fpisa.FP32,
+):
+    """Shift mantissas to the shared block exponent: (R,B) i32 -> (R,B) i32."""
+    shift = (bmax[:, None] - exp) + preshift
+    return nx.arshift(man, shift)
+
+
+def decode_ref(
+    man_sum: jax.Array,
+    bmax: jax.Array,
+    preshift: int,
+    fmt: fpisa.FpFormat = fpisa.FP32,
+):
+    """(R,B) i32 summed mantissas + (R,) block exp -> (R,B) packed FP."""
+    e = jnp.broadcast_to(bmax[:, None] + preshift, man_sum.shape)
+    return fpisa.renormalize(fpisa.Planes(exp=e, man=man_sum), fmt)
+
+
+def accum_ref(x: jax.Array, variant: str = "fpisa_a", fmt: fpisa.FpFormat = fpisa.FP32):
+    """Sequential switch-order accumulation. x: (W, R, B) -> (R, B) packed FP."""
+    w = x.shape[0]
+    return fpisa.fpisa_sum_sequential(x.reshape(w, -1), fmt, variant=variant).reshape(
+        x.shape[1:]
+    )

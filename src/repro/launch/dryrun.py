@@ -1,0 +1,313 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS_EXTRA", "")  # noqa: E501 — MUST be the first two lines, before any jax-touching import
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract roofline terms from the compiled artifact."""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, get_config, shape_applicable, ARCH_NAMES  # noqa: E402
+from repro.configs.base import ShapeConfig  # noqa: E402
+from repro.core.allreduce import AggConfig  # noqa: E402
+from repro.launch import hloscan  # noqa: E402
+from repro.launch import specs as S  # noqa: E402
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh  # noqa: E402
+from repro.models.registry import build  # noqa: E402
+from repro.optim import optimizers  # noqa: E402
+from repro.sharding import rules  # noqa: E402
+from repro.train.step import make_train_step  # noqa: E402
+
+COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+\[[^\]]*\]\S*)\s+"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute-start|collective-permute)\(",
+)
+GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, total_devices: int):
+    """Per-device wire-byte estimate per collective category + op census."""
+    out = {"ops": [], "wire_bytes_per_device": 0.0, "by_kind": {}}
+    for line in hlo_text.splitlines():
+        m = COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        kind = kind.replace("-start", "")
+        size = _shape_bytes(type_str)  # per-device output bytes
+        k = total_devices
+        gm = GROUPS_IOTA_RE.search(line)
+        if gm:
+            k = int(gm.group(2))
+        else:
+            gl = GROUPS_LIST_RE.search(line)
+            if gl:
+                k = len(gl.group(1).split(","))
+        if k <= 1:
+            continue
+        if kind == "all-reduce":
+            wire = size * 2 * (k - 1) / k
+        elif kind == "all-gather":
+            wire = size * (k - 1) / k  # size is the gathered output
+        elif kind == "reduce-scatter":
+            wire = size * (k - 1)  # size is the scattered output
+        elif kind == "all-to-all":
+            wire = size * (k - 1) / k
+        else:  # collective-permute
+            wire = size
+        out["ops"].append({"kind": kind, "bytes": size, "group": k, "wire": wire})
+        out["wire_bytes_per_device"] += wire
+        agg = out["by_kind"].setdefault(kind, {"count": 0, "wire": 0.0})
+        agg["count"] += 1
+        agg["wire"] += wire
+    return out
+
+
+def model_flops(cfg, shape: ShapeConfig) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) for train; 2*N*D for inference."""
+    n = active_param_count(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n * tokens
+
+
+def active_param_count(cfg) -> float:
+    hd = cfg.resolved_head_dim
+    if cfg.family == "ssm":
+        di = cfg.ssm_d_inner
+        per = cfg.d_model * (2 * di + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads) + di * cfg.d_model
+        return cfg.num_layers * per + cfg.vocab_size * cfg.d_model * 2
+    attn = cfg.d_model * hd * cfg.num_heads * 2 + cfg.d_model * hd * cfg.num_kv_heads * 2
+    if cfg.family == "moe":
+        ff = cfg.num_experts_per_token * 3 * cfg.d_model * cfg.d_ff
+        if cfg.moe_dense_ff:
+            ff += 3 * cfg.d_model * cfg.moe_dense_ff
+    elif cfg.family == "hybrid":
+        di = cfg.ssm_d_inner
+        mamba = cfg.d_model * (2 * di + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads) + di * cfg.d_model
+        ng = cfg.num_layers // cfg.hybrid_attn_every
+        shared = ng * (attn + 3 * cfg.d_model * cfg.d_ff)
+        return cfg.num_layers * mamba + shared + cfg.vocab_size * cfg.d_model * 2
+    else:
+        ff = 3 * cfg.d_model * cfg.d_ff
+    layers = cfg.num_layers * (attn + ff)
+    if cfg.is_encoder_decoder:
+        layers += cfg.num_encoder_layers * (attn + 3 * cfg.d_model * cfg.d_ff)
+        layers += cfg.num_layers * attn  # cross attention
+    emb = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    return layers + emb
+
+
+def build_cell(arch: str, shape_name: str, mesh, agg_strategy: str = "fpisa",
+               overrides: dict | None = None, wire_bits: int = 32,
+               pod_wire_bits=None, agg_chunk: int = 0, agg_fmt: str = "fp32"):
+    """Returns (jitted fn, kwargs of ShapeDtypeStructs with shardings)."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    shape = SHAPES[shape_name]
+    model = build(cfg)
+    nd = mesh.devices.size
+
+    p_sds = S.param_specs(model)
+    pspecs = rules.param_pspecs(p_sds, cfg, mesh)
+    p_shard = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        p_sds, pspecs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+    batch_sds = S.input_specs(cfg, shape)
+    bspecs = rules.input_pspecs(batch_sds, mesh, shape.global_batch)
+    b_shard = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        batch_sds, bspecs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+    if shape.kind == "train":
+        opt_cfg = optimizers.OptConfig(name=cfg.optimizer)
+        o_sds = S.opt_specs(p_sds, opt_cfg)
+        ospecs = rules.opt_pspecs(pspecs, p_sds, mesh)
+        o_shard = optimizers.OptState(
+            step=jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P())),
+            m=jax.tree.map(
+                lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+                o_sds.m, ospecs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+            ),
+            v=None if o_sds.v is None else jax.tree.map(
+                lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+                o_sds.v, ospecs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+            ),
+        )
+        agg = AggConfig(strategy=agg_strategy, wire_bits=wire_bits,
+                        pod_wire_bits=pod_wire_bits, chunk_elems=agg_chunk,
+                        fmt_name=agg_fmt)
+        step = make_train_step(model, mesh, agg, opt_cfg, shape.global_batch,
+                               accum_steps=cfg.accum_steps)
+        # donate params + optimizer state: in-place update, halves peak memory
+        return jax.jit(step, donate_argnums=(0, 1)), (p_shard, o_shard, b_shard)
+
+    cache_sds = S.cache_specs(model, shape.global_batch, shape.seq_len)
+    cspecs = rules.cache_pspecs(cache_sds, mesh, shape.global_batch, cfg)
+    c_shard = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, sp))
+        if hasattr(s, "shape") else s,
+        cache_sds, cspecs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    if shape.kind == "prefill":
+        # donate the cache: prefill writes it in place
+        fn = jax.jit(lambda p, b, c: build(cfg).prefill(p, b, c), donate_argnums=(2,))
+        return fn, (p_shard, b_shard, c_shard)
+    # decode: cache updated in place every step
+    fn = jax.jit(lambda p, t, c: build(cfg).decode_step(p, t, c), donate_argnums=(2,))
+    return fn, (p_shard, b_shard["tokens"], c_shard)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, agg_strategy: str = "fpisa",
+             overrides: dict | None = None, save_hlo: str | None = None,
+             wire_bits: int = 32, pod_wire_bits=None, agg_chunk: int = 0,
+             agg_fmt: str = "fp32") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    nd = mesh.devices.size
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    shape = SHAPES[shape_name]
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "mesh": dict(mesh.shape), "agg": agg_strategy, "status": "ok",
+        "overrides": overrides or {}, "wire_bits": wire_bits,
+        "pod_wire_bits": pod_wire_bits,
+    }
+    if not shape_applicable(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = "long_500k requires sub-quadratic attention (see DESIGN.md)"
+        return rec
+    t0 = time.time()
+    try:
+        jax.sharding.set_mesh(mesh)  # enables in-model sharding hints
+        fn, args = build_cell(arch, shape_name, mesh, agg_strategy, overrides,
+                              wire_bits, pod_wire_bits, agg_chunk, agg_fmt)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        # hloscan handles while-loop (lax.scan) trip-count multiplication,
+        # which XLA's own cost analysis does not (see hloscan module doc).
+        an = hloscan.analyze(hlo, nd)
+
+        flops_dev = an.flops
+        bytes_dev = an.hbm_bytes
+        compute_t = flops_dev / PEAK_FLOPS_BF16
+        memory_t = bytes_dev / HBM_BW
+        coll_t = an.wire_bytes / ICI_BW
+        mf = model_flops(cfg, shape)
+        rec.update({
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "per_device": {
+                "arg_bytes": ma.argument_size_in_bytes,
+                "out_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "peak_bytes": ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                               + ma.output_size_in_bytes - ma.alias_size_in_bytes,
+                "hlo_flops": flops_dev,
+                "hlo_bytes": bytes_dev,
+                "coll_wire_bytes": an.wire_bytes,
+                "xla_cost_flops_unscaled": float(ca.get("flops", 0.0)),
+            },
+            "roofline": {
+                "compute_s": compute_t,
+                "memory_s": memory_t,
+                "collective_s": coll_t,
+                "bottleneck": max(
+                    ("compute", compute_t), ("memory", memory_t), ("collective", coll_t),
+                    key=lambda kv: kv[1],
+                )[0],
+            },
+            "model_flops_global": mf,
+            "useful_flops_ratio": (mf / (flops_dev * nd)) if flops_dev else None,
+            "collectives_by_kind": an.collectives,
+        })
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — a failed cell is a finding, not a crash
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None, help="shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--agg", default="fpisa")
+    ap.add_argument("--wire-bits", type=int, default=32)
+    ap.add_argument("--pod-wire-bits", type=int, default=None)
+    ap.add_argument("--agg-chunk", type=int, default=0)
+    ap.add_argument("--agg-fmt", default="fp32")
+    ap.add_argument("--out", default=None, help="append JSON lines here")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (value parsed as python literal)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            import ast
+
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+
+    archs = ARCH_NAMES if args.arch in (None, "all") else [args.arch]
+    shapes = list(SHAPES) if args.shape in (None, "all") else [args.shape]
+    for arch in archs:
+        for shape in shapes:
+            rec = run_cell(arch, shape, args.multi_pod, args.agg,
+                           overrides or None, args.save_hlo,
+                           args.wire_bits, args.pod_wire_bits, args.agg_chunk,
+                           args.agg_fmt)
+            line = json.dumps(rec)
+            print(line, flush=True)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(line + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,409 @@
+"""HLO-text analyzer: FLOPs / HBM bytes / collective wire bytes with correct
+while-loop (lax.scan) trip-count multiplication.
+
+XLA's HloCostAnalysis visits a while body ONCE, so compiled.cost_analysis()
+undercounts scan-over-layers programs by ~num_layers x (verified in
+EXPERIMENTS.md §Dry-run notes). This module re-derives the three roofline
+inputs from compiled.as_text():
+
+  flops   : 2 * prod(out_dims) * prod(contracting_dims) per dot, + 1/elem for
+            elementwise ops inside fusions, multiplied through nested whiles.
+  hbm     : sum of (operands + outputs) bytes of top-level ops at fusion
+            granularity (fusion internals don't touch HBM), same multipliers.
+  wire    : per-device collective bytes with ring-model factors
+            (all-reduce 2(k-1)/k, gather/scatter/all-to-all (k-1)/k,
+            permute 1), same multipliers.
+
+Conventions are documented in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+INSTR_RE = re.compile(r"^\s+(ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+OPCODE_AFTER_TYPE_RE = re.compile(r"^\s*([\w\-]+)\(")
+
+
+def _parse_rhs(rhs: str):
+    """Split '<type> <opcode>(rest' handling tuple types that contain
+    /*index=N*/ comments (so pure regex on '=' fails). Returns
+    (type_str, opcode, rest) or None."""
+    rhs = rhs.lstrip()
+    if rhs.startswith("("):
+        depth = 0
+        for pos, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str = rhs[: pos + 1]
+                    tail = rhs[pos + 1:]
+                    m = OPCODE_AFTER_TYPE_RE.match(tail)
+                    if not m:
+                        return None
+                    return type_str, m.group(1), tail[m.end():]
+        return None
+    m = re.match(r"^([\w\[\],{}]+)\s+([\w\-]+)\(", rhs)
+    if not m:
+        return None
+    return m.group(1), m.group(2), rhs[m.end():]
+COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.*?)\s*\{\s*$")
+TRIP_RE = re.compile(r'known_trip_count[\\"=:{]+n[\\":]+(\d+)')
+GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "after-all", "partition-id", "replica-id", "iota",
+}
+COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+ELEMENTWISE_FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "compare", "select", "and", "or", "xor", "shift-left",
+    "shift-right-arithmetic", "shift-right-logical", "floor", "ceil",
+    "round-nearest-afz", "sign", "convert", "cosine", "sine", "logistic",
+    "reduce", "reduce-window", "clamp", "remainder", "atan2", "expm1", "log1p",
+}
+
+
+def shape_elems(type_str: str) -> int:
+    total = 0
+    for m in SHAPE_RE.finditer(type_str):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in SHAPE_RE.finditer(type_str):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # everything after the opcode's '('
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    symbols: Dict[str, str]  # instr/param name -> type string
+
+
+def _split_params(sig: str) -> List[tuple]:
+    """'a: f32[2], b: (s32[], f32[3])' -> [(a, 'f32[2]'), (b, '(s32[], f32[3])')]."""
+    out, depth, cur = [], 0, ""
+    for ch in sig:
+        if ch == "," and depth == 0:
+            out.append(cur)
+            cur = ""
+            continue
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        cur += ch
+    if cur.strip():
+        out.append(cur)
+    pairs = []
+    for item in out:
+        if ":" in item:
+            nm, ty = item.split(":", 1)
+            pairs.append((nm.strip().lstrip("%"), ty.strip()))
+    return pairs
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        hdr = COMP_HDR_RE.match(line)
+        if hdr:
+            cur = Computation(name=hdr.group(2), instrs=[], symbols={})
+            for nm, ty in _split_params(hdr.group(3)):
+                cur.symbols[nm] = ty
+            comps[cur.name] = cur
+            if hdr.group(1):
+                comps["__entry__"] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(2), m.group(3)
+        parsed = _parse_rhs(rhs)
+        if parsed is None:
+            continue
+        type_str, opcode, rest = parsed
+        cur.symbols[name] = type_str
+        cur.instrs.append(Instr(name=name, type_str=type_str, opcode=opcode,
+                                rest=rest, line=line))
+    return comps
+
+
+def _operands(instr: Instr) -> List[str]:
+    """Names of %operands inside the call parens (first balanced group)."""
+    depth, out, cur = 1, [], ""
+    for ch in instr.rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                out.append(cur)
+                break
+        if depth >= 1:
+            cur += ch if ch != "," or depth > 1 else "\x00"
+    parts = "".join(out).split("\x00") if out else []
+    names = []
+    for p in parts:
+        mm = re.search(r"%([\w.\-]+)", p)
+        if mm:
+            names.append(mm.group(1))
+    return names
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    out_elems = shape_elems(instr.type_str)
+    ops = _operands(instr)
+    contract = 1
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+    if cm and ops:
+        lhs_ty = comp.symbols.get(ops[0], "")
+        dims = _shape_dims(lhs_ty)
+        for idx in cm.group(1).split(","):
+            if idx != "" and int(idx) < len(dims):
+                contract *= dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def _trip_count(instr: Instr, comps: Dict[str, Computation]) -> int:
+    t = TRIP_RE.search(instr.line)
+    if t:
+        return int(t.group(1))
+    cm = re.search(r"condition=%?([\w.\-]+)", instr.line)
+    if cm and cm.group(1) in comps:
+        consts = [
+            int(c)
+            for i in comps[cm.group(1)].instrs
+            for c in re.findall(r"constant\((\d+)\)", i.line)
+        ]
+        if consts:
+            return max(consts)
+    return 1
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+
+    def add_collective(self, kind: str, wire: float, count: float):
+        agg = self.collectives.setdefault(kind, {"count": 0.0, "wire": 0.0})
+        agg["count"] += count
+        agg["wire"] += wire
+
+
+def _fusion_flops(comp: Computation, comps) -> float:
+    total = 0.0
+    for i in comp.instrs:
+        if i.opcode == "dot":
+            total += _dot_flops(i, comp)
+        elif i.opcode == "fusion":
+            cm = re.search(r"calls=%?([\w.\-]+)", i.line)
+            if cm and cm.group(1) in comps:
+                total += _fusion_flops(comps[cm.group(1)], comps)
+        elif i.opcode in ELEMENTWISE_FLOP:
+            total += shape_elems(i.type_str)
+    return total
+
+
+def _sliced_param_indices(called: Computation) -> Dict[int, str]:
+    """Parameter index -> slice-result type for fusion parameters whose only
+    in-fusion use begins with a (dynamic-)slice/gather — those reads touch
+    slice-output bytes, not the whole operand (e.g. per-layer reads of a
+    stacked scan carry)."""
+    pname_to_idx: Dict[str, int] = {}
+    uses: Dict[str, list] = {}
+    for ins in called.instrs:
+        if ins.opcode == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", ins.line)
+            if pm:
+                pname_to_idx[ins.name] = int(pm.group(1))
+        else:
+            for o in _operands(ins):
+                uses.setdefault(o, []).append(ins)
+    out: Dict[int, str] = {}
+    for pname, idx in pname_to_idx.items():
+        u = uses.get(pname, [])
+        if not u:
+            continue
+        if all(x.opcode in ("dynamic-slice", "slice", "gather") for x in u):
+            out[idx] = u[0].type_str
+        elif all(
+            x.opcode == "dynamic-update-slice" and _operands(x) and _operands(x)[0] == pname
+            for x in u
+        ):
+            # in-place update target: traffic = the update slice, not the stack
+            ops0 = _operands(u[0])
+            out[idx] = called.symbols.get(ops0[1], "") if len(ops0) > 1 else ""
+    return out
+
+
+def _fusion_bytes(instr: Instr, comp: Computation, comps, cache: dict) -> float:
+    """Output bytes + operand bytes, with sliced-inside params charged at
+    slice-output size."""
+    key = None
+    cm = re.search(r"calls=%?([\w.\-]+)", instr.line)
+    sliced: Dict[int, str] = {}
+    if cm and cm.group(1) in comps:
+        key = "bytes::" + cm.group(1)
+        if key not in cache:
+            cache[key] = _sliced_param_indices(comps[cm.group(1)])
+        sliced = cache[key]
+    total = shape_bytes(instr.type_str)
+    for idx, o in enumerate(_operands(instr)):
+        if idx in sliced:
+            total += shape_bytes(sliced[idx])
+        else:
+            total += shape_bytes(comp.symbols.get(o, ""))
+    return total
+
+
+def _wire_factor(kind: str, size: float, k: int) -> float:
+    if kind == "all-reduce":
+        return size * 2 * (k - 1) / k
+    if kind == "all-gather":
+        return size * (k - 1) / k
+    if kind == "reduce-scatter":
+        return size * (k - 1)
+    if kind == "all-to-all":
+        return size * (k - 1) / k
+    return size  # collective-permute
+
+
+def _analyze(comp: Computation, comps, mult: float, total_devices: int,
+             acc: Analysis, seen_fusion_cache: dict):
+    for i in comp.instrs:
+        op = i.opcode
+        if op == "while":
+            body = re.search(r"body=%?([\w.\-]+)", i.line)
+            trip = _trip_count(i, comps)
+            if body and body.group(1) in comps:
+                _analyze(comps[body.group(1)], comps, mult * trip,
+                         total_devices, acc, seen_fusion_cache)
+            continue
+        if op in ("call", "async-start"):
+            cm = re.search(r"(?:to_apply|calls)=%?([\w.\-]+)", i.line)
+            if cm and cm.group(1) in comps:
+                _analyze(comps[cm.group(1)], comps, mult, total_devices, acc,
+                         seen_fusion_cache)
+            continue
+        if op == "conditional":
+            for cm in re.finditer(r"(?:branch_computations=\{([^}]*)\}|true_computation=%?([\w.\-]+)|false_computation=%?([\w.\-]+))", i.line):
+                names = [n for n in re.findall(r"%?([\w.\-]+)", cm.group(0)) if n in comps]
+                for n in names[:1]:
+                    _analyze(comps[n], comps, mult, total_devices, acc,
+                             seen_fusion_cache)
+            continue
+
+        base_kind = op.replace("-start", "")
+        if base_kind in {"all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute"} and op != "all-reduce-done":
+            size = shape_bytes(i.type_str)
+            k = total_devices
+            gm = GROUPS_IOTA_RE.search(i.line)
+            if gm:
+                k = int(gm.group(2))
+            else:
+                gl = GROUPS_LIST_RE.search(i.line)
+                if gl:
+                    k = len(gl.group(1).split(","))
+            if k > 1:
+                wire = _wire_factor(base_kind, size, k) * mult
+                acc.wire_bytes += wire
+                acc.add_collective(base_kind, wire, mult)
+            # collectives also move HBM bytes
+            acc.hbm_bytes += shape_bytes(i.type_str) * 2 * mult
+            continue
+
+        if op == "dot":
+            acc.flops += _dot_flops(i, comp) * mult
+        elif op == "fusion":
+            cm = re.search(r"calls=%?([\w.\-]+)", i.line)
+            if cm:
+                key = cm.group(1)
+                if key not in seen_fusion_cache:
+                    seen_fusion_cache[key] = (
+                        _fusion_flops(comps[key], comps) if key in comps else 0.0
+                    )
+                acc.flops += seen_fusion_cache[key] * mult
+        elif op in ELEMENTWISE_FLOP:
+            acc.flops += shape_elems(i.type_str) * mult
+
+        if op not in SKIP_BYTES_OPS:
+            if op in ("dynamic-slice", "slice", "gather", "broadcast", "concatenate", "pad", "reshape", "transpose", "copy", "reverse"):
+                # slicing/layout ops read ~output-sized data, not the full
+                # operand (a dynamic-slice of a scan carry must not be charged
+                # the whole carry every iteration)
+                acc.hbm_bytes += 2 * shape_bytes(i.type_str) * mult
+            elif op in ("dynamic-update-slice", "scatter"):
+                ops_ = _operands(i)
+                upd = shape_bytes(comp.symbols.get(ops_[1], "")) if len(ops_) > 1 else 0
+                acc.hbm_bytes += 2 * upd * mult
+            elif op == "fusion":
+                acc.hbm_bytes += _fusion_bytes(i, comp, comps, seen_fusion_cache) * mult
+            else:
+                b = shape_bytes(i.type_str)
+                for o in _operands(i):
+                    b += shape_bytes(comp.symbols.get(o, ""))
+                acc.hbm_bytes += b * mult
+
+
+def analyze(hlo_text: str, total_devices: int) -> Analysis:
+    comps = parse_module(hlo_text)
+    acc = Analysis()
+    if "__entry__" not in comps:
+        return acc
+    _analyze(comps["__entry__"], comps, 1.0, total_devices, acc, {})
+    return acc

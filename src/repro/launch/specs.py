@@ -1,0 +1,51 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation happens here: everything is abstract shapes, including
+parameters (via jax.eval_shape over init) and serving caches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Batch inputs for train/prefill; decode adds tokens-only (cache comes
+    from cache_specs)."""
+    b, s = shape.global_batch, shape.seq_len
+    act = cfg.activation_dtype
+    if shape.kind == "decode":
+        batch = {"tokens": sds((b, 1), jnp.int32)}
+        return batch
+    if cfg.family == "vlm":
+        text = s - cfg.num_patches
+        return {
+            "tokens": sds((b, text), jnp.int32),
+            "patch_embeds": sds((b, cfg.num_patches, cfg.d_model), act),
+        }
+    if cfg.is_encoder_decoder:
+        return {
+            "tokens": sds((b, s), jnp.int32),
+            "frames": sds((b, cfg.num_frames, cfg.d_model), act),
+        }
+    return {"tokens": sds((b, s), jnp.int32)}
+
+
+def param_specs(model) -> dict:
+    return jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def cache_specs(model, batch: int, max_len: int):
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+def opt_specs(params_like, opt_cfg):
+    from repro.optim import optimizers
+
+    return jax.eval_shape(lambda p: optimizers.init(p, opt_cfg), params_like)

@@ -1,0 +1,117 @@
+"""Training launcher: end-to-end loop with checkpoint/restart, health
+monitoring, and FPISA gradient aggregation.
+
+Usage (CPU-scale example — see examples/train_lm.py for a driver):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
+      --steps 50 --agg fpisa --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.allreduce import AggConfig
+from repro.data.pipeline import ShardedLoader, SyntheticCorpus
+from repro.models.registry import build, param_count
+from repro.optim import optimizers
+from repro.runtime import checkpoint as ckpt
+from repro.runtime.elastic import make_mesh_for
+from repro.runtime.health import HealthMonitor
+from repro.sharding import rules
+from repro.train.step import make_train_step
+
+
+def train_loop(cfg, *, steps: int, global_batch: int, seq_len: int,
+               agg_strategy: str = "fpisa", ckpt_dir: str | None = None,
+               ckpt_every: int = 50, mesh=None, log_every: int = 10,
+               opt_overrides: dict | None = None, seed: int = 0):
+    mesh = mesh or make_mesh_for()
+    model = build(cfg)
+    opt_kw = {"name": cfg.optimizer, "lr": cfg.learning_rate}
+    opt_kw.update(opt_overrides or {})
+    opt_cfg = optimizers.OptConfig(**opt_kw)
+
+    params = model.init(jax.random.PRNGKey(seed))
+    pspecs = rules.param_pspecs(params, cfg, mesh)
+    params = jax.device_put(params, rules.named(mesh, pspecs))
+    opt_state = optimizers.init(params, opt_cfg)
+    ospecs = rules.opt_pspecs(pspecs, params, mesh)
+    opt_state = optimizers.OptState(
+        step=jax.device_put(opt_state.step, NamedSharding(mesh, P())),
+        m=jax.device_put(opt_state.m, rules.named(mesh, ospecs)),
+        v=None if opt_state.v is None else jax.device_put(opt_state.v, rules.named(mesh, ospecs)),
+    )
+
+    start_step = 0
+    saver = None
+    if ckpt_dir:
+        saver = ckpt.AsyncCheckpointer(ckpt_dir)
+        latest = ckpt.latest_step(ckpt_dir)
+        if latest is not None:
+            host_params, extra = ckpt.restore(ckpt_dir, latest, params)
+            params = jax.device_put(host_params, rules.named(mesh, pspecs))
+            host_opt, _ = ckpt.restore(ckpt_dir + "_opt", latest, opt_state)
+            opt_state = optimizers.OptState(
+                step=jax.device_put(host_opt.step, NamedSharding(mesh, P())),
+                m=jax.device_put(host_opt.m, rules.named(mesh, ospecs)),
+                v=None if host_opt.v is None else jax.device_put(host_opt.v, rules.named(mesh, ospecs)),
+            )
+            start_step = latest + 1
+            print(f"[train] resumed from step {latest}")
+
+    agg = AggConfig(strategy=agg_strategy)
+    step_fn = jax.jit(make_train_step(model, mesh, agg, opt_cfg, global_batch))
+    loader = ShardedLoader(SyntheticCorpus(cfg.vocab_size, seed), global_batch, seq_len)
+    bspec = rules.batch_pspec(mesh, global_batch)
+    health = HealthMonitor(hosts=[0])
+
+    print(f"[train] {cfg.name}: {param_count(params)/1e6:.1f}M params, "
+          f"mesh={dict(mesh.shape)}, agg={agg_strategy}")
+    history = []
+    for step in range(start_step, steps):
+        t0 = time.time()
+        batch = {"tokens": jax.device_put(
+            loader.batch_at(step)["tokens"], NamedSharding(mesh, P(*bspec, None)))}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        health.heartbeat(0, dt)
+        history.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            tok_s = global_batch * seq_len / dt
+            print(f"[train] step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} {tok_s:,.0f} tok/s")
+        if saver and step > 0 and step % ckpt_every == 0:
+            saver.save(step, params, {"loss": loss})
+            ckpt.save(ckpt_dir + "_opt", step, jax.device_get(opt_state))
+    if saver:
+        saver.wait()
+    return params, opt_state, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--agg", default="fpisa",
+                    choices=["native", "fpisa", "switchml", "fpisa_seq"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    train_loop(cfg, steps=args.steps, global_batch=args.global_batch,
+               seq_len=args.seq_len, agg_strategy=args.agg,
+               ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,211 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()`` feeds
+precomputed frame embeddings (B, F, d_model) directly to the encoder. The
+encoder is bidirectional self-attention; the decoder is causal self-attention
++ cross-attention over the encoder output. Learned (sinusoid-free) position
+embeddings; cross K/V are computed once at prefill and cached.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.sharding import hints
+from repro.models.layers import (
+    AxesRecorder,
+    apply_mlp,
+    embed,
+    init_embedding,
+    init_lm_head,
+    init_mlp,
+    init_rms_norm,
+    param,
+    rms_norm,
+)
+
+_REC = AxesRecorder()
+
+
+def _remat(f, cfg):
+    if cfg.remat == "none":
+        return f
+    return jax.checkpoint(f)
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": init_rms_norm(cfg.d_model, jnp.dtype(cfg.param_dtype), _REC, "ln1"),
+        "attn": attn.init_attention(ks[0], cfg, _REC, "attn"),
+        "ln2": init_rms_norm(cfg.d_model, jnp.dtype(cfg.param_dtype), _REC, "ln2"),
+        "mlp": init_mlp(ks[1], cfg, _REC, "mlp"),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_rms_norm(cfg.d_model, jnp.dtype(cfg.param_dtype), _REC, "ln1"),
+        "attn": attn.init_attention(ks[0], cfg, _REC, "attn"),
+        "lnx": init_rms_norm(cfg.d_model, jnp.dtype(cfg.param_dtype), _REC, "lnx"),
+        "xattn": attn.init_cross_attention(ks[1], cfg, _REC, "xattn"),
+        "ln2": init_rms_norm(cfg.d_model, jnp.dtype(cfg.param_dtype), _REC, "ln2"),
+        "mlp": init_mlp(ks[2], cfg, _REC, "mlp"),
+    }
+
+
+def init_encdec(key, cfg):
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.num_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "embed": init_embedding(ks[2], cfg, _REC, "embed"),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "enc_norm": init_rms_norm(cfg.d_model, dt, _REC, "enc_norm"),
+        "final_norm": init_rms_norm(cfg.d_model, dt, _REC, "final_norm"),
+        "head": init_lm_head(ks[3], cfg, _REC, "head"),
+        # frontend adapter for the stubbed conv features
+        "frame_proj": {
+            "w": param(ks[4], (cfg.d_model, cfg.d_model), ("embed", "embed2"), dt, _REC, "fp/w")
+        },
+    }
+
+
+def encode(params, frames, cfg):
+    """frames: (B, F, d_model) stub embeddings -> encoder states (B, F, d)."""
+    x = jnp.einsum("bfd,de->bfe", frames.astype(jnp.dtype(cfg.activation_dtype)),
+                   params["frame_proj"]["w"])
+    x = hints.constrain(x, "batch", None, None)
+    b, f, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32), (b, f))
+
+    def body(carry, lp):
+        h = attn.attention_train(
+            lp["attn"], rms_norm(carry, lp["ln1"]["w"], cfg.norm_eps), cfg, positions,
+            causal=False,
+        )
+        y = carry + h
+        z = rms_norm(y, lp["ln2"]["w"], cfg.norm_eps)
+        return y + apply_mlp(lp["mlp"], z, cfg), None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"]["w"], cfg.norm_eps)
+
+
+def _dec_block(lp, x, cfg, positions, enc_kv):
+    h = attn.attention_train(lp["attn"], rms_norm(x, lp["ln1"]["w"], cfg.norm_eps), cfg, positions)
+    x = x + h
+    h = attn.cross_attention(lp["xattn"], rms_norm(x, lp["lnx"]["w"], cfg.norm_eps), enc_kv, cfg)
+    x = x + h
+    z = rms_norm(x, lp["ln2"]["w"], cfg.norm_eps)
+    return x + apply_mlp(lp["mlp"], z, cfg)
+
+
+def forward(params, batch, cfg):
+    """batch: {'frames': (B,F,d), 'tokens': (B,S)} -> (logits, aux=0)."""
+    enc = encode(params, batch["frames"], cfg)
+    x = embed(params["embed"], batch["tokens"]).astype(jnp.dtype(cfg.activation_dtype))
+    x = hints.constrain(x, "batch", None, None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, lp):
+        kv = attn.encode_cross_kv(lp["xattn"], enc)
+        return _dec_block(lp, carry, cfg, positions, kv), None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["dec_layers"])
+    x = rms_norm(x, params["final_norm"]["w"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"])
+    return logits, jnp.float32(0)
+
+
+def loss_fn(params, batch, cfg):
+    logits, _ = forward(params, batch, cfg)
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = batch["tokens"][:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+class EncDecCache(NamedTuple):
+    self_kv: Any  # KVCache stacked (L, B, Smax, K, hd)
+    cross_kv: Any  # (k, v) each (L, B, F, K, hd)
+    pos: jax.Array
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    dt = jnp.dtype(cfg.activation_dtype)
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.resolved_head_dim)
+    xshape = (cfg.num_layers, batch, cfg.num_frames, cfg.num_kv_heads, cfg.resolved_head_dim)
+    return EncDecCache(
+        self_kv=attn.KVCache(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt)),
+        cross_kv=(jnp.zeros(xshape, dt), jnp.zeros(xshape, dt)),
+        pos=jnp.int32(0),
+    )
+
+
+def prefill(params, batch, cache: EncDecCache, cfg):
+    """Encode frames, compute per-layer cross K/V, prefill decoder self-cache."""
+    enc = encode(params, batch["frames"], cfg)
+    x = embed(params["embed"], batch["tokens"]).astype(jnp.dtype(cfg.activation_dtype))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, xs):
+        lp, k_l, v_l = xs
+        xk, xv = attn.encode_cross_kv(lp["xattn"], enc)
+        h, new_c = attn.attention_prefill(
+            lp["attn"], rms_norm(carry, lp["ln1"]["w"], cfg.norm_eps), cfg, positions,
+            attn.KVCache(k_l, v_l),
+        )
+        y = carry + h
+        h = attn.cross_attention(lp["xattn"], rms_norm(y, lp["lnx"]["w"], cfg.norm_eps),
+                                 (xk, xv), cfg)
+        y = y + h
+        z = rms_norm(y, lp["ln2"]["w"], cfg.norm_eps)
+        y = y + apply_mlp(lp["mlp"], z, cfg)
+        return y, (new_c.k, new_c.v, xk.astype(k_l.dtype), xv.astype(k_l.dtype))
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(
+        _remat(body, cfg), x, (params["dec_layers"], cache.self_kv.k, cache.self_kv.v)
+    )
+    x = rms_norm(x[:, -1:, :], params["final_norm"]["w"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"])
+    return logits, EncDecCache(
+        self_kv=attn.KVCache(ks, vs), cross_kv=(xks, xvs), pos=jnp.int32(s)
+    )
+
+
+def decode_step(params, tokens, cache: EncDecCache, cfg):
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.activation_dtype))
+    pos = cache.pos
+
+    def body(carry, xs):
+        lp, k_l, v_l, xk, xv = xs
+        h, new_c = attn.attention_decode(
+            lp["attn"], rms_norm(carry, lp["ln1"]["w"], cfg.norm_eps), cfg,
+            attn.KVCache(k_l, v_l), pos,
+        )
+        y = carry + h
+        h = attn.cross_attention(lp["xattn"], rms_norm(y, lp["lnx"]["w"], cfg.norm_eps),
+                                 (xk, xv), cfg)
+        y = y + h
+        z = rms_norm(y, lp["ln2"]["w"], cfg.norm_eps)
+        y = y + apply_mlp(lp["mlp"], z, cfg)
+        return y, (new_c.k, new_c.v)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache.self_kv.k, cache.self_kv.v,
+                  cache.cross_kv[0], cache.cross_kv[1])
+    )
+    x = rms_norm(x, params["final_norm"]["w"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"])
+    return logits, EncDecCache(
+        self_kv=attn.KVCache(ks, vs), cross_kv=cache.cross_kv, pos=pos + 1
+    )

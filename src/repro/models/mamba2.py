@@ -1,0 +1,187 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train scan + recurrent decode.
+
+Follows the discrete SSD formulation (Dao & Gu, 2024):
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * (B_t ⊗ x_t)
+    y_t = C_t · h_t + D * x_t
+Training uses the chunked block decomposition: exact intra-chunk quadratic
+attention-like term + inter-chunk state recurrence (one lax.scan over chunks),
+which is sub-quadratic in sequence length — this is why the SSM/hybrid archs
+are the ones that run the long_500k shape.
+
+All state math in float32 (dt*A <= 0 so exps are <= 1 and stable).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import param, rms_norm, silu
+
+
+def init_mamba2(key, cfg, rec, path):
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    h = cfg.ssm_heads
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    w = cfg.ssm_conv_width
+    dt = jnp.dtype(cfg.param_dtype)
+    conv_ch = di + 2 * g * n
+    ks = jax.random.split(key, 8)
+    # in_proj emits [z (di), x (di), B (g*n), C (g*n), dt (h)]
+    return {
+        "in_proj": param(ks[0], (d, 2 * di + 2 * g * n + h), ("embed", "ssm_proj"), dt, rec, path + "/in_proj"),
+        "conv_w": param(ks[1], (w, conv_ch), ("conv_w", "ssm_conv"), dt, rec, path + "/conv_w", scale=0.1),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_w": jnp.ones((di,), dt),
+        "out_proj": param(ks[2], (di, d), ("ssm_inner", "embed"), dt, rec, path + "/out_proj",
+                          scale=0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, g, n, h = cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * g * n]
+    dt = proj[..., di + di + 2 * g * n :]
+    return z, xbc, dt
+
+
+def _causal_conv_train(xbc, w, b):
+    """xbc: (B,S,C); depthwise causal conv, width w.shape[0]."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    s = xbc.shape[1]
+    out = sum(pad[:, i : i + s] * w[i] for i in range(width))
+    return silu(out + b)
+
+
+def _segsum(dA):
+    """dA: (..., Q) -> (..., Q, Q) with out[q, k] = sum_{i=k+1..q} dA_i (q>=k)."""
+    css = jnp.cumsum(dA, axis=-1)
+    diff = css[..., :, None] - css[..., None, :]
+    q = dA.shape[-1]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, d_skip, chunk: int):
+    """SSD forward.
+
+    x: (B,S,H,P) bf16/f32; dt: (B,S,H) f32 (>0, post-softplus);
+    a: (H,) f32 (<0); bmat/cmat: (B,S,G,N); d_skip: (H,).
+    Returns y: (B,S,H,P) in x.dtype and final state (B,H,P,N) f32.
+    """
+    bsz, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hg = h // g
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+
+    xf = x.astype(jnp.float32)
+    da = dt * a  # (B,S,H), <= 0
+    xb = xf * dt[..., None]  # dt-weighted input
+
+    # chunked views
+    dac = da.reshape(bsz, nc, q, h)
+    xbc = xb.reshape(bsz, nc, q, h, p)
+    bc = bmat.reshape(bsz, nc, q, g, n).astype(jnp.float32)
+    cc = cmat.reshape(bsz, nc, q, g, n).astype(jnp.float32)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    lmat = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))  # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bnqgs,bnkgs->bngqk", cc, bc)  # (B,nc,G,Q,Q)
+    scores = jnp.repeat(scores, hg, axis=2)  # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bnhqk,bnkhp->bnqhp", lmat * scores, xbc)
+
+    # ---- chunk-final states ----
+    css = jnp.cumsum(dac, axis=2)  # (B,nc,Q,H)
+    decay_to_end = jnp.exp(css[:, :, -1:, :] - css)  # (B,nc,Q,H)
+    bfull = jnp.repeat(bc, hg, axis=3)  # (B,nc,Q,H,N)
+    states = jnp.einsum("bnqhs,bnqh,bnqhp->bnhps", bfull, decay_to_end, xbc)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(css[:, :, -1, :])  # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp  # st: (B,H,P,N); dec: (B,H)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit the state *entering* the chunk
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    states_t = states.transpose(1, 0, 2, 3, 4)  # (nc,B,H,P,N)
+    decay_t = chunk_decay.transpose(1, 0, 2)  # (nc,B,H)
+    final, entering = jax.lax.scan(scan_fn, h0, (states_t, decay_t))
+    entering = entering.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution ----
+    in_decay = jnp.exp(css)  # decay from chunk start to position q
+    cfull = jnp.repeat(cc, hg, axis=3)  # (B,nc,Q,H,N)
+    y_off = jnp.einsum("bnqhs,bnqh,bnhps->bnqhp", cfull, in_decay, entering)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    y = y + xf * d_skip[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def apply_mamba2(p, x, cfg, ssm_state=None, conv_state=None, decode: bool = False):
+    """Full mamba2 block. Train/prefill: decode=False, x (B,S,d).
+    Decode: x (B,1,d) with (ssm_state (B,H,P,N), conv_state (B,w-1,C)) carried.
+    Returns (y, new_ssm_state, new_conv_state)."""
+    di, g, n, h = cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_head_dim
+    width = cfg.ssm_conv_width
+
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc_in, dt_raw = _split_proj(cfg, proj)
+    a = -jnp.exp(p["a_log"])  # (H,) < 0
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+
+    if not decode:
+        xbc = _causal_conv_train(xbc_in, p["conv_w"], p["conv_b"])
+        new_conv = xbc_in[:, -(width - 1) :, :] if xbc_in.shape[1] >= width - 1 else None
+        xs = xbc[..., :di]
+        bmat = xbc[..., di : di + g * n].reshape(*xbc.shape[:2], g, n)
+        cmat = xbc[..., di + g * n :].reshape(*xbc.shape[:2], g, n)
+        xh = xs.reshape(*xs.shape[:2], h, pdim)
+        y, final_state = ssd_chunked(xh, dt, a, bmat, cmat, p["d_skip"], cfg.ssm_chunk)
+        y = y.reshape(*y.shape[:2], di)
+    else:
+        # one-step recurrence
+        cs = jnp.concatenate([conv_state, xbc_in], axis=1)  # (B, w, C)
+        xbc = silu(jnp.einsum("bwc,wc->bc", cs, p["conv_w"]) + p["conv_b"])[:, None, :]
+        new_conv = cs[:, 1:, :]
+        xs = xbc[..., :di]
+        bmat = xbc[..., di : di + g * n].reshape(xbc.shape[0], 1, g, n).astype(jnp.float32)
+        cmat = xbc[..., di + g * n :].reshape(xbc.shape[0], 1, g, n).astype(jnp.float32)
+        xh = xs.reshape(xs.shape[0], h, pdim).astype(jnp.float32)
+        dt1 = dt[:, 0]  # (B,H)
+        da = jnp.exp(dt1 * a)  # (B,H)
+        hg = h // g
+        bfull = jnp.repeat(bmat[:, 0], hg, axis=1)  # (B,H,N)
+        cfull = jnp.repeat(cmat[:, 0], hg, axis=1)
+        upd = jnp.einsum("bh,bhp,bhs->bhps", dt1, xh, bfull)
+        final_state = ssm_state * da[:, :, None, None] + upd
+        yh = jnp.einsum("bhs,bhps->bhp", cfull, final_state) + xh * p["d_skip"][None, :, None]
+        y = yh.reshape(yh.shape[0], 1, di).astype(x.dtype)
+
+    # gated RMSNorm then output projection
+    y = rms_norm(y * silu(z), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, final_state, new_conv
+
+
+def init_ssm_state(batch, cfg):
+    return (
+        jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        jnp.zeros(
+            (batch, cfg.ssm_conv_width - 1, cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state),
+            jnp.dtype(cfg.activation_dtype),
+        ),
+    )

@@ -1,0 +1,45 @@
+"""Model registry: one uniform functional interface per architecture family."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable  # (key) -> params
+    forward: Callable  # (params, batch) -> (logits, aux)
+    loss: Callable  # (params, batch) -> scalar
+    prefill: Callable  # (params, batch, cache) -> (logits, cache)
+    decode_step: Callable  # (params, tokens, cache) -> (logits, cache)
+    init_cache: Callable  # (batch_size, max_len) -> cache
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.is_encoder_decoder:
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec(key, cfg),
+            forward=lambda p, b: encdec.forward(p, b, cfg),
+            loss=lambda p, b: encdec.loss_fn(p, b, cfg),
+            prefill=lambda p, b, c: encdec.prefill(p, b, c, cfg),
+            decode_step=lambda p, t, c: encdec.decode_step(p, t, c, cfg),
+            init_cache=lambda bs, ml: encdec.init_cache(cfg, bs, ml),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_lm(key, cfg),
+        forward=lambda p, b: transformer.forward(p, b, cfg),
+        loss=lambda p, b: transformer.loss_fn(p, b, cfg),
+        prefill=lambda p, b, c: transformer.prefill(p, b, c, cfg),
+        decode_step=lambda p, t, c: transformer.decode_step(p, t, c, cfg),
+        init_cache=lambda bs, ml: transformer.init_cache(cfg, bs, ml),
+    )
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,164 @@
+"""Fault-tolerant checkpointing: atomic commits, retention, async writes,
+mesh-independent restore (elastic resharding is layered on top in elastic.py).
+
+Layout:
+  <dir>/step_<n>.tmp/      while writing
+  <dir>/step_<n>/          after atomic rename (commit point)
+      manifest.json        {leaf path -> {file, shape, dtype}}, step, extra
+      <i>.npy              one file per leaf (host-gathered global arrays)
+  <dir>/latest             text file holding the newest committed step
+
+Partially-written checkpoints (no manifest / bad sizes) are skipped on
+restore, so a crash mid-save never poisons a restart.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = [
+        "/".join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k)))) for k in kp)
+        for kp, _ in flat
+    ]
+    return paths, [l for _, l in flat], treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None,
+         keep: int = 3) -> str:
+    paths, leaves, _ = _flatten(tree)
+    tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"{i}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][p] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # commit point
+    with open(os.path.join(ckpt_dir, "latest.tmp"), "w") as f:
+        f.write(str(step))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(os.path.join(ckpt_dir, "latest.tmp"), os.path.join(ckpt_dir, "latest"))
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def _retain(ckpt_dir: str, keep: int):
+    steps = sorted(committed_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+
+def committed_steps(ckpt_dir: str):
+    out = []
+    if not os.path.isdir(ckpt_dir):
+        return out
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            path = os.path.join(ckpt_dir, name, "manifest.json")
+            if os.path.exists(path):
+                try:
+                    out.append(int(name.split("_", 1)[1]))
+                except ValueError:
+                    pass
+    return out
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    """Newest *valid* checkpoint — prefers the `latest` pointer but falls back
+    to a directory scan if the pointer is stale or the target is corrupt."""
+    candidates = sorted(committed_steps(ckpt_dir), reverse=True)
+    ptr = os.path.join(ckpt_dir, "latest")
+    if os.path.exists(ptr):
+        try:
+            s = int(open(ptr).read().strip())
+            if s in candidates and _valid(ckpt_dir, s):
+                return s
+        except (ValueError, OSError):
+            pass
+    for s in candidates:
+        if _valid(ckpt_dir, s):
+            return s
+    return None
+
+
+def _valid(ckpt_dir: str, step: int) -> bool:
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    try:
+        manifest = json.load(open(os.path.join(d, "manifest.json")))
+    except (OSError, json.JSONDecodeError):
+        return False
+    for meta in manifest["leaves"].values():
+        f = os.path.join(d, meta["file"])
+        if not os.path.exists(f):
+            return False
+    return True
+
+
+def restore(ckpt_dir: str, step: int, like: Any) -> tuple[Any, dict]:
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). Returns (tree, extra)."""
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    paths, leaves, treedef = _flatten(like)
+    out = []
+    for p, leaf in zip(paths, leaves):
+        meta = manifest["leaves"][p]
+        arr = np.load(os.path.join(d, meta["file"]))
+        want = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"shape mismatch for {p}: {arr.shape} vs {want}")
+        out.append(arr.astype(getattr(leaf, "dtype", arr.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint writes with training (one in flight at a time)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    def save(self, step: int, tree: Any, extra: dict | None = None):
+        self.wait()
+        host_tree = jax.device_get(tree)  # snapshot before training mutates
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree, extra, self.keep)
+            except Exception as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,52 @@
+"""Elastic scaling: re-lay a checkpoint out on a different mesh.
+
+Checkpoints store *global* arrays (mesh-independent), so elasticity reduces
+to (a) rebuilding the mesh at the new size, (b) recomputing PartitionSpecs
+from the same logical rules, (c) device_put with the new shardings, and
+(d) rescaling data-pipeline shard assignments. Batch-size-invariant restarts
+(same global batch, different host count) are exact; tests cover 8->4->8.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.runtime import checkpoint as ckpt
+from repro.sharding import rules
+
+
+def make_mesh_for(devices=None, model_parallel: int = 1, pods: int = 1):
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    assert n % (model_parallel * pods) == 0
+    data = n // (model_parallel * pods)
+    if pods > 1:
+        return jax.make_mesh((pods, data, model_parallel), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model_parallel), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def resume_on_mesh(ckpt_dir: str, like_params, like_opt, cfg, mesh: Mesh):
+    """Restore the latest checkpoint and place it on `mesh` with the logical
+    sharding rules. Returns (params, opt_state, extra) or None if no ckpt."""
+    step = ckpt.latest_step(ckpt_dir)
+    if step is None:
+        return None
+    params_host, extra = ckpt.restore(ckpt_dir, step, like_params)
+    opt_host, _ = ckpt.restore(ckpt_dir + "/opt", step, like_opt) if like_opt is not None else (None, None)
+
+    pspecs = rules.param_pspecs(params_host, cfg, mesh)
+    params = jax.device_put(params_host, rules.named(mesh, pspecs))
+    opt_state = None
+    if opt_host is not None:
+        ospecs = rules.opt_pspecs(pspecs, params_host, mesh)
+        # OptState = (step, m, v): step replicated, m/v follow opt specs
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        opt_state = type(opt_host)(
+            step=jax.device_put(opt_host.step, NamedSharding(mesh, P())),
+            m=jax.device_put(opt_host.m, rules.named(mesh, ospecs)),
+            v=None if opt_host.v is None else jax.device_put(opt_host.v, rules.named(mesh, ospecs)),
+        )
+    return params, opt_state, {"step": step, **extra}

@@ -1,0 +1,70 @@
+"""Cluster health: heartbeats, failure detection, straggler policy.
+
+Single-process control-plane logic (the data plane is JAX): a coordinator
+tracks per-host heartbeats and step-completion times; hosts that miss
+``timeout`` are declared dead and their data shards reassigned
+deterministically (see data/pipeline.reassign_shard — the replacement
+regenerates the identical stream). Stragglers (completion time > multiplier x
+rolling median) trigger the mitigation hook — by default a re-shard
+recommendation; in a real deployment this drives the scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+
+@dataclasses.dataclass
+class HostState:
+    last_heartbeat: float
+    step_times: deque
+    alive: bool = True
+
+
+class HealthMonitor:
+    def __init__(self, hosts: list[int], timeout: float = 60.0,
+                 straggler_factor: float = 2.0, window: int = 16,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout
+        self.straggler_factor = straggler_factor
+        self.clock = clock
+        self.hosts = {
+            h: HostState(last_heartbeat=clock(), step_times=deque(maxlen=window))
+            for h in hosts
+        }
+        self.reassignments: dict[int, int] = {}  # dead shard -> replacement host
+
+    def heartbeat(self, host: int, step_time: float | None = None):
+        st = self.hosts[host]
+        st.last_heartbeat = self.clock()
+        st.alive = True
+        if step_time is not None:
+            st.step_times.append(step_time)
+
+    def check(self) -> dict:
+        """Returns {'dead': [...], 'stragglers': [...], 'reassign': {shard: host}}."""
+        now = self.clock()
+        dead, stragglers = [], []
+        all_times = [t for s in self.hosts.values() if s.alive for t in s.step_times]
+        median = sorted(all_times)[len(all_times) // 2] if all_times else None
+        for h, st in self.hosts.items():
+            if st.alive and now - st.last_heartbeat > self.timeout:
+                st.alive = False
+                dead.append(h)
+            elif (
+                st.alive
+                and median is not None
+                and st.step_times
+                and st.step_times[-1] > self.straggler_factor * median
+            ):
+                stragglers.append(h)
+        # deterministic reassignment: dead shard -> lowest-id surviving host
+        survivors = sorted(h for h, s in self.hosts.items() if s.alive)
+        reassign = {}
+        for i, h in enumerate(sorted(dead)):
+            if survivors:
+                reassign[h] = survivors[i % len(survivors)]
+        self.reassignments.update(reassign)
+        return {"dead": dead, "stragglers": stragglers, "reassign": reassign}

@@ -1,0 +1,230 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Parameters get PartitionSpecs by leaf *path + config* pattern matching
+(param names in the functional init code are unique; tests assert coverage
+for every arch).
+
+Mesh axes: ('pod',) 'data', 'model'.
+
+Attention TP mode is chosen per architecture from divisibility against the
+'model' axis size m:
+  head  : H % m == 0 and K % m == 0     -> q,k,v sharded on their head axes
+  qhead : H % m == 0 only               -> q sharded on heads, k/v weights
+          replicated (Megatron-style KV duplication; GQA repeat aligns them)
+  hdim  : head_dim % m == 0             -> q,k,v sharded on head_dim
+          (contraction-sharded scores; costs an all-reduce — visible in the
+          roofline, a hillclimb target for arctic/llava)
+  none  : replicated attention weights.
+
+MoE: experts over 'model', expert ff over 'data' (so the 1T kimi bank fits);
+FSDP ('data' on embed axes) turns on when cfg.dp_boundary == 'pod'.
+Optimizer m/v shard their first free divisible axis over 'data' (ZeRO-1).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def attn_mode(cfg, model_size: int) -> str:
+    h, k, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    if h == 0:
+        return "none"
+    if h % model_size == 0 and k % model_size == 0:
+        return "head"
+    if h % model_size == 0:
+        return "qhead"
+    if hd % model_size == 0:
+        return "hdim"
+    return "none"
+
+
+def _div(n: int, size: int, axis="model"):
+    return axis if n % size == 0 else None
+
+
+def _param_spec(path: str, ndim: int, cfg, m: int, dsz: int) -> P:
+    fsdp = cfg.dp_boundary == "pod"
+    d = "data" if fsdp else None
+    am = attn_mode(cfg, m)
+
+    def match(*pats):
+        return any(re.search(p, path) for p in pats)
+
+    if match(r"embed/tok"):
+        return P(_div(cfg.vocab_size, m), d)
+    if match(r"head/w"):
+        return P(d, _div(cfg.vocab_size, m))
+    if match(r"vlm_proj", r"frame_proj"):
+        return P(d, _div(cfg.d_model, m))
+    if match(r"attn/wq$", r"xattn/wq$"):
+        if am == "head" or am == "qhead":
+            return P(d, "model", None)
+        if am == "hdim":
+            return P(d, None, "model")
+        return P(d, None, None)
+    if match(r"attn/w[kv]$", r"xattn/w[kv]$"):
+        if am == "head":
+            return P(d, "model", None)
+        if am == "hdim":
+            return P(d, None, "model")
+        return P(d, None, None)  # qhead: replicated KV (Megatron duplication)
+    if match(r"attn/wo$", r"xattn/wo$"):
+        if am in ("head", "qhead"):
+            return P("model", None, d)
+        if am == "hdim":
+            return P(None, "model", d)
+        return P(None, None, d)
+    if match(r"attn/bq$", r"xattn/bq$"):
+        return P("model" if am in ("head", "qhead") else None, None)
+    if match(r"attn/b[kv]$", r"xattn/b[kv]$"):
+        return P("model" if am == "head" else None, None)
+    if match(r"moe/router"):
+        return P(d, None)
+    if match(r"moe/wi$", r"moe/wg$"):
+        return P(_div(cfg.num_experts, m), None, _div(cfg.d_ff, dsz, "data"))
+    if match(r"moe/wo$"):
+        return P(_div(cfg.num_experts, m), _div(cfg.d_ff, dsz, "data"), None)
+    if match(r"dense_mlp/wi$", r"dense_mlp/wg$"):
+        return P(d, _div(cfg.moe_dense_ff, m))
+    if match(r"dense_mlp/wo$"):
+        return P(_div(cfg.moe_dense_ff, m), d)
+    if match(r"mlp/wi$", r"mlp/wg$"):
+        return P(d, _div(cfg.d_ff, m))
+    if match(r"mlp/wo$"):
+        return P(_div(cfg.d_ff, m), d)
+    if match(r"mamba/in_proj"):
+        proj = 2 * cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads
+        return P(d, _div(proj, m))
+    if match(r"mamba/out_proj"):
+        return P(_div(cfg.ssm_d_inner, m), d)
+    if match(r"mamba/conv_w"):
+        conv_ch = cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        return P(None, _div(conv_ch, m))
+    if match(r"mamba/conv_b"):
+        conv_ch = cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        return P(_div(conv_ch, m))
+    if match(r"mamba/norm_w"):
+        return P(_div(cfg.ssm_d_inner, m))
+    # small vectors: norms, a_log, dt_bias, d_skip
+    return P(*([None] * ndim))
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k)))) for k in kp
+        )
+        out.append((path, leaf))
+    return out, treedef
+
+
+_STACKED_RE = re.compile(r"(^|/)(layers|tail_layers|enc_layers|dec_layers)(/|$)")
+
+
+def param_pspecs(params, cfg, mesh: Mesh):
+    """PartitionSpec pytree mirroring `params` (shape-dtype structs are fine)."""
+    m = mesh.shape.get("model", 1)
+    dsz = mesh.shape.get("data", 1)
+    flat, treedef = _tree_paths(params)
+    specs = []
+    for path, leaf in flat:
+        stacked = bool(_STACKED_RE.search(path))
+        extra = 0
+        if stacked:
+            extra = 2 if (cfg.family == "hybrid" and path.startswith("layers/")) else 1
+        spec = _param_spec(path, leaf.ndim - extra, cfg, m, dsz)
+        specs.append(P(*([None] * extra + list(spec))))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_pspecs(param_specs, params, mesh: Mesh):
+    """AdamW m/v sharding: add 'data' on the first unsharded axis divisible by
+    the data-axis size (ZeRO-1 memory layout)."""
+    data = mesh.shape.get("data", 1)
+
+    def one(spec: P, leaf):
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        flatparts = [
+            q for p in parts for q in ((p,) if not isinstance(p, tuple) else p)
+        ]
+        if "data" in flatparts:
+            return P(*parts)
+        for i, p in enumerate(parts):
+            if p is None and leaf.shape[i] % data == 0 and leaf.shape[i] >= data:
+                parts[i] = "data"
+                return P(*parts)
+        return P(*parts)
+
+    return jax.tree.map(
+        one, param_specs, params, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_axes(mesh: Mesh, batch_size: int):
+    use = []
+    rem = batch_size
+    for a in ("pod", "data"):
+        if a in mesh.axis_names and rem % mesh.shape[a] == 0:
+            use.append(a)
+            rem //= mesh.shape[a]
+    return tuple(use)
+
+
+def batch_pspec(mesh: Mesh, batch_size: int):
+    use = batch_axes(mesh, batch_size)
+    return P(use if use else None)
+
+
+def input_pspecs(batch, mesh: Mesh, batch_size: int):
+    """Shard every batch input on its leading (batch) axis."""
+    spec = batch_pspec(mesh, batch_size)
+
+    def one(leaf):
+        return P(*(list(spec) + [None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(one, batch)
+
+
+def cache_pspecs(cache, mesh: Mesh, batch_size: int, cfg):
+    """Serving-cache shardings. KV heads shard over 'model' when divisible;
+    otherwise the cache *sequence* axis shards over 'model' (context-parallel
+    decode). Batch shards over replica axes; for batch=1 long-context the seq
+    axis also takes 'data'."""
+    m = mesh.shape.get("model", 1)
+    b_axes = batch_axes(mesh, batch_size) or None
+    kv_div = cfg.num_kv_heads and cfg.num_kv_heads % m == 0
+    seq_parts = []
+    if batch_size == 1 and "data" in mesh.axis_names:
+        seq_parts.append("data")
+    if not kv_div and "model" in mesh.axis_names and cfg.num_kv_heads:
+        seq_parts.append("model")
+    seq_spec = tuple(seq_parts) if seq_parts else None
+
+    def one(path, leaf):
+        if getattr(leaf, "ndim", 0) == 0:
+            return P()
+        if re.search(r"(^|/)(kv|self_kv)/[kv]$|cross_kv/[01]$", path):
+            # (L, B, S, K, hd)
+            return P(None, b_axes, seq_spec, "model" if kv_div else None, None)
+        if re.search(r"(^|/)ssm$", path):
+            # (L, B, H, P, N)
+            return P(None, b_axes, _div(cfg.ssm_heads, m), None, None)
+        if re.search(r"(^|/)conv$", path):
+            conv_ch = cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+            return P(None, b_axes, None, _div(conv_ch, m))
+        return P()
+
+    flat, treedef = _tree_paths(cache)
+    return jax.tree_util.tree_unflatten(treedef, [one(p, l) for p, l in flat])

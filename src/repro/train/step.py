@@ -1,0 +1,133 @@
+"""Train-step factory: FPISA gradient aggregation at the data-parallel boundary.
+
+Two execution shapes, selected by ``cfg.dp_boundary`` and the mesh:
+
+* ``replica`` (dense/ssm/hybrid/vlm/audio): params are replicated over the
+  replica axes (pod, data) and TP-sharded over 'model'. The whole
+  grad-computation runs inside ``shard_map`` with the replica axes *manual*
+  and 'model' *auto*; per-replica gradients are aggregated explicitly by the
+  configured strategy (native float psum / SwitchML / FPISA integer planes /
+  sequential switch semantics). This is the paper's architecture: workers
+  compute full gradients, the "switch" (= the FPISA collective) aggregates.
+
+* ``pod`` (MoE giants): experts and FSDP shards live on the (data, model)
+  grid, so only the cross-pod hop carries replica-redundant gradients —
+  exactly where an in-network aggregator physically sits. shard_map is manual
+  over 'pod' only; in-pod reductions stay in XLA-native float, the cross-pod
+  reduction is FPISA-integer (hierarchical aggregation, DESIGN.md §2).
+
+On a single-pod mesh with ``pod`` boundary there is no replica axis left and
+the step degrades to plain auto-jit with native reductions (recorded as such
+in EXPERIMENTS.md).
+
+The optimizer update runs *outside* the shard_map under automatic sharding so
+ZeRO-1 ('data'-sharded m/v) resolves through XLA's partitioner.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.allreduce import AggConfig, allreduce_tree
+from repro.optim import optimizers
+from repro.sharding import rules
+
+
+def _replica_axes(mesh: Mesh, cfg) -> tuple:
+    if cfg.dp_boundary == "pod":
+        return ("pod",) if "pod" in mesh.axis_names else ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_train_step(model, mesh: Mesh, agg: AggConfig, opt_cfg: optimizers.OptConfig,
+                    global_batch: int, accum_steps: int = 1):
+    """Returns step_fn(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``accum_steps`` > 1 splits the per-device batch into microbatches and
+    scans over them, accumulating gradients in f32 — divides the remat
+    activation live-set by the microbatch count at the cost of re-running the
+    (already overlapped) backward collectives per microbatch."""
+    cfg = model.cfg
+    boundary = _replica_axes(mesh, cfg)
+
+    def grads_and_loss(params, batch):
+        if accum_steps <= 1:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            return loss, grads
+
+        def reshape(leaf):
+            b = leaf.shape[0]
+            assert b % accum_steps == 0, (b, accum_steps)
+            return leaf.reshape(accum_steps, b // accum_steps, *leaf.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            loss, grads = jax.value_and_grad(model.loss)(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, loss_acc + loss), None
+
+        (grads, loss), _ = jax.lax.scan(body, (zeros, jnp.float32(0)), micro)
+        inv = 1.0 / accum_steps
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        return loss * inv, grads
+
+    if boundary and agg.strategy != "native":
+        batch_axes = rules.batch_axes(mesh, global_batch)
+        manual_batch_axes = tuple(a for a in batch_axes if a in boundary)
+
+        def sharded_grads(params, batch):
+            loss, grads = grads_and_loss(params, batch)
+            grads = allreduce_tree(grads, boundary, agg)
+            loss = jax.lax.pmean(loss, boundary)
+            return loss, grads
+
+        auto = frozenset(a for a in mesh.axis_names if a not in boundary)
+
+        def batch_spec(leaf):
+            return P(*( [manual_batch_axes if manual_batch_axes else None]
+                       + [None] * (leaf.ndim - 1)))
+
+        def apply_grads(params, batch):
+            in_specs = (
+                jax.tree.map(lambda _: P(), params),
+                jax.tree.map(batch_spec, batch),
+            )
+            return jax.shard_map(
+                sharded_grads,
+                mesh=mesh,
+                in_specs=in_specs,
+                out_specs=(P(), jax.tree.map(lambda _: P(), params)),
+                axis_names=set(boundary),
+                check_vma=False,
+            )(params, batch)
+    else:
+        def apply_grads(params, batch):
+            loss, grads = grads_and_loss(params, batch)
+            return loss, grads
+
+    def train_step(params, opt_state, batch):
+        loss, grads = apply_grads(params, batch)
+        params, opt_state, metrics = optimizers.update(params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_steps(model, mesh: Mesh):
+    """(prefill_fn, decode_fn) — plain auto-sharded jit functions."""
+
+    def prefill(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    def decode(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+
+    return prefill, decode

@@ -1,0 +1,220 @@
+"""FPISA core numerics: bit-exact semantics vs a scalar Python reference,
+plus hypothesis property tests of the invariants in DESIGN.md §7."""
+import struct
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import fpisa as F
+from repro.core import numerics as nx
+
+# ---------------------------------------------------------------------------
+# scalar Python reference (independent implementation pinning semantics)
+# ---------------------------------------------------------------------------
+
+
+def ref_encode(x: float):
+    bits = struct.unpack("<I", struct.pack("<f", np.float32(x)))[0]
+    sign = bits >> 31
+    exp = (bits >> 23) & 0xFF
+    man = bits & 0x7FFFFF
+    if exp == 0:  # denormal flush
+        return 0, 0
+    if exp == 0xFF:  # clamp specials
+        exp, man = 0xFE, 0x7FFFFF
+    mag = man | 0x800000
+    return exp, -mag if sign else mag
+
+
+def ref_arshift(m, s):
+    s = max(0, min(31, s))
+    return m >> s  # python ints: arithmetic shift
+
+
+def ref_fpisa_a_add(acc, inp, headroom=7):
+    (ae, am), (ie, im) = acc, inp
+    d = ie - ae
+    if d <= 0:
+        return ae, _wrap32(am + ref_arshift(im, -d))
+    if d <= headroom:
+        return ae, _wrap32(am + _wrap32(im << d))
+    return ie, im  # overwrite
+
+
+def ref_full_add(acc, inp):
+    (ae, am), (ie, im) = acc, inp
+    d = ie - ae
+    if d <= 0:
+        return ae, _wrap32(am + ref_arshift(im, -d))
+    return ie, _wrap32(ref_arshift(am, d) + im)
+
+
+def _wrap32(v):
+    v &= 0xFFFFFFFF
+    return v - (1 << 32) if v >= (1 << 31) else v
+
+
+def ref_renorm(e, m):
+    if m == 0:
+        return 0.0
+    neg = m < 0
+    mag = abs(m)
+    k = mag.bit_length() - 1
+    shift = k - 23
+    if shift >= 0:
+        m2 = m >> shift  # round toward -inf
+    else:
+        m2 = m << -shift
+    if abs(m2) >> 24:
+        m2 >>= 1
+        shift += 1
+    e2 = e + shift
+    if e2 <= 0:
+        return 0.0
+    if e2 >= 255:
+        return float("inf") * (-1 if neg else 1)
+    bits = ((1 if m2 < 0 else 0) << 31) | (e2 << 23) | (abs(m2) & 0x7FFFFF)
+    return struct.unpack("<f", struct.pack("<I", bits))[0]
+
+
+finite_f32 = st.floats(
+    allow_nan=False, allow_infinity=False, width=32,
+).filter(lambda x: x == 0.0 or 2**-126 <= abs(x) <= float(np.float32(3.4e38)))
+
+
+@given(finite_f32)
+@settings(max_examples=300, deadline=None)
+def test_encode_matches_scalar_ref(x):
+    p = F.encode(jnp.float32(x))
+    re, rm = ref_encode(x)
+    assert int(p.exp) == re and int(p.man) == rm
+
+
+@given(finite_f32)
+@settings(max_examples=300, deadline=None)
+def test_roundtrip_bit_exact(x):
+    p = F.encode(jnp.float32(x))
+    y = F.renormalize(p)
+    if x == 0.0:
+        # switch registers hold signless zero: -0.0 round-trips to +0.0
+        assert float(y) == 0.0
+    else:
+        assert np.float32(x).view(np.int32) == np.asarray(y).view(np.int32)
+
+
+@given(finite_f32, finite_f32)
+@settings(max_examples=300, deadline=None)
+def test_fpisa_a_add_matches_scalar_ref(a, b):
+    pa, pb = F.encode(jnp.float32(a)), F.encode(jnp.float32(b))
+    out, _ = F.fpisa_a_add(pa, pb)
+    re, rm = ref_fpisa_a_add((int(pa.exp), int(pa.man)), (int(pb.exp), int(pb.man)))
+    assert (int(out.exp), int(out.man)) == (re, rm)
+
+
+@given(finite_f32, finite_f32)
+@settings(max_examples=300, deadline=None)
+def test_full_add_matches_scalar_ref(a, b):
+    pa, pb = F.encode(jnp.float32(a)), F.encode(jnp.float32(b))
+    out, _ = F.fpisa_add_full(pa, pb)
+    re, rm = ref_full_add((int(pa.exp), int(pa.man)), (int(pb.exp), int(pb.man)))
+    assert (int(out.exp), int(out.man)) == (re, rm)
+
+
+@given(st.lists(st.floats(min_value=-1e3, max_value=1e3, width=32), min_size=2, max_size=12))
+@settings(max_examples=100, deadline=None)
+def test_sequential_sum_matches_scalar_chain(vals):
+    vals = [v if abs(v) >= 2**-120 else 0.0 for v in vals]
+    arr = jnp.asarray(np.asarray(vals, np.float32)[:, None])
+    out = F.fpisa_sum_sequential(arr, variant="fpisa_a")
+    acc = (0, 0)
+    for v in vals:
+        acc = ref_fpisa_a_add(acc, ref_encode(v))
+    expect = ref_renorm(*((acc[0]), acc[1]))
+    got = float(np.asarray(out)[0])
+    assert got == pytest.approx(expect, abs=0) or (
+        np.isinf(expect) and np.isinf(got)
+    ), (vals, got, expect)
+
+
+def test_full_add_exact_when_no_truncation():
+    # values with identical exponents: mantissa add is exact
+    a = np.float32(1.5)
+    b = np.float32(1.25)
+    out = F.renormalize(F.fpisa_add_full(F.encode(a), F.encode(b))[0])
+    assert float(out) == 2.75
+
+
+def test_full_add_round_toward_neg_inf():
+    # 1.0 + 2^-24 truncates the shifted-out bit -> exactly 1.0
+    out = F.renormalize(F.fpisa_add_full(F.encode(np.float32(1.0)), F.encode(np.float32(2**-24)))[0])
+    assert float(out) == 1.0
+    # -1.0 - 2^-24 rounds toward -inf -> next value BELOW -1.0
+    out = F.renormalize(F.fpisa_add_full(F.encode(np.float32(-1.0)), F.encode(np.float32(-(2**-24))))[0])
+    assert float(out) < -1.0
+
+
+def test_overwrite_error_bounded():
+    # acc = small, incoming 2^8 larger -> overwrite; error == dropped acc value
+    small, big = np.float32(1.0), np.float32(512.0)
+    out, st_ = F.fpisa_a_add(F.encode(small), F.encode(big))
+    assert bool(st_.overwrite)
+    assert float(F.renormalize(out)) == 512.0  # small was dropped (paper Sec 4.3)
+
+
+def test_fpisa_a_left_shift_exact_within_headroom():
+    # incoming larger by <= 2^7: left shift is exact
+    out, st_ = F.fpisa_a_add(F.encode(np.float32(1.0)), F.encode(np.float32(64.0)))
+    assert not bool(st_.overwrite)
+    assert float(F.renormalize(out)) == 65.0
+
+
+def test_zero_accumulator_first_write_not_an_error():
+    zero = F.Planes(exp=jnp.int32(0), man=jnp.int32(0))
+    out, st_ = F.fpisa_a_add(zero, F.encode(np.float32(3.5)))
+    assert not bool(st_.overwrite)
+    assert float(F.renormalize(out)) == 3.5
+
+
+@pytest.mark.parametrize("fmt", [F.FP32, F.FP16, F.BF16])
+def test_roundtrip_formats(fmt):
+    rng = np.random.default_rng(0)
+    dtype = {"fp32": np.float32, "fp16": np.float16, "bf16": None}[fmt.name]
+    if fmt.name == "bf16":
+        x = jnp.asarray(rng.standard_normal(512), jnp.bfloat16)
+    else:
+        x = rng.standard_normal(512).astype(dtype)
+        # flush values below the format's normal range
+        x = np.where(np.abs(x.astype(np.float64)) < 2.0 ** (1 - fmt.bias), 0, x).astype(dtype)
+        x = jnp.asarray(x)
+    y = F.renormalize(F.encode(x, fmt), fmt)
+    assert jnp.all((y == x) | (jnp.isnan(x))), fmt.name
+
+
+def test_block_roundtrip_and_bound():
+    rng = np.random.default_rng(1)
+    x = (rng.standard_normal(4096) * 0.1).astype(np.float32)
+    p = F.encode(x)
+    be = F.block_max_exponent(p.exp, 256)
+    for s in (0, 2):
+        m = F.block_encode(x, be, 256, s)
+        back = np.asarray(F.block_decode(m, be, 256, s), np.float64)
+        # error bounded by one ULP at the (block max exponent + preshift) scale
+        bound = np.exp2(np.repeat(np.asarray(be), 256) - 127 - 23 + s)
+        assert np.all(np.abs(back - x) <= bound + 1e-30)
+
+
+def test_required_preshift():
+    assert nx.required_preshift(128) == 0  # 7 headroom bits = 128 adds
+    assert nx.required_preshift(256) == 1
+    assert nx.required_preshift(512) == 2
+    assert nx.required_preshift(2) == 0
+
+
+def test_clz32():
+    vals = np.asarray([1, 2, 3, 255, 2**23, 2**31 - 1, 0], np.uint32)
+    got = np.asarray(nx.clz32(jnp.asarray(vals.view(np.int32))))
+    expect = np.asarray([31, 30, 30, 24, 8, 1, 32])
+    assert np.array_equal(got, expect)

@@ -1,0 +1,86 @@
+"""Per-architecture smoke tests (reduced configs, CPU, 1 device) — required
+by the assignment: instantiate each arch family, run one forward/train step,
+assert output shapes and no NaNs; plus prefill<->forward logits consistency
+(a strong end-to-end correctness check for the serving path)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_smoke_config
+from repro.models.registry import build
+
+
+def _batch(cfg, b=2, s=32, key=0):
+    k = jax.random.PRNGKey(key)
+    batch = {"tokens": jax.random.randint(k, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(k, (b, cfg.num_patches, cfg.d_model))
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(k, (b, cfg.num_frames, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux = model.forward(params, batch)
+    s_total = batch["tokens"].shape[1] + (cfg.num_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, s_total, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    for leaf in jax.tree.leaves(grads):
+        assert bool(jnp.isfinite(leaf).all()), f"{arch}: non-finite grad"
+
+    # one SGD step moves the loss
+    lr = 1e-2
+    params2 = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+    loss2 = model.loss(params2, batch)
+    assert bool(jnp.isfinite(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_matches_forward_logits(arch):
+    """Teacher-forcing consistency: prefill's last-token logits must equal the
+    forward pass's last-position logits (same params, same inputs)."""
+    cfg = get_smoke_config(arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    batch = _batch(cfg, b=2, s=16, key=2)
+    logits, _ = model.forward(params, batch)
+    cache = model.init_cache(2, 48)
+    plog, cache = model.prefill(params, batch, cache)
+    np.testing.assert_allclose(
+        np.asarray(plog[:, -1]), np.asarray(logits[:, -1]), rtol=2e-4, atol=2e-4
+    )
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_decode_matches_forward_next_position(arch):
+    """Append token t via decode_step; its logits must match a fresh forward
+    pass over the extended sequence at the same position."""
+    cfg = get_smoke_config(arch)
+    if cfg.family == "vlm":
+        pytest.skip("vlm decode consistency covered via dense family (patch prefix offsets positions)")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    s = 16
+    batch = _batch(cfg, b=2, s=s, key=4)
+    cache = model.init_cache(2, 48)
+    _, cache = model.prefill(params, batch, cache)
+
+    next_tok = jnp.asarray([[7], [11]], jnp.int32)
+    dlog, cache = model.decode_step(params, next_tok, cache)
+
+    ext = dict(batch)
+    ext["tokens"] = jnp.concatenate([batch["tokens"], next_tok], axis=1)
+    flog, _ = model.forward(params, ext)
+    np.testing.assert_allclose(
+        np.asarray(dlog[:, -1]), np.asarray(flog[:, -1]), rtol=5e-3, atol=5e-3
+    )

@@ -1,0 +1,115 @@
+"""Sharding rules coverage: every parameter of every arch gets a VALID
+PartitionSpec on the production mesh (all sharded dims divisible), and the
+attention TP mode matches each arch's divisibility structure."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch import specs as S
+from repro.models.registry import build
+from repro.optim import optimizers
+from repro.sharding import rules
+
+MESH = AbstractMesh((16, 16), ("data", "model"),
+                    axis_types=(jax.sharding.AxisType.Auto,) * 2)
+MESH_MP = AbstractMesh((2, 16, 16), ("pod", "data", "model"),
+                       axis_types=(jax.sharding.AxisType.Auto,) * 3)
+
+
+def _axis_size(mesh, part):
+    if part is None:
+        return 1
+    if isinstance(part, tuple):
+        out = 1
+        for p in part:
+            out *= mesh.shape[p]
+        return out
+    return mesh.shape[part]
+
+
+def _check_specs(tree, specs, mesh, where):
+    flat_p = jax.tree.leaves(tree)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for leaf, spec in zip(flat_p, flat_s):
+        assert len(spec) <= leaf.ndim, (where, leaf.shape, spec)
+        for dim, part in zip(leaf.shape, list(spec)):
+            size = _axis_size(mesh, part)
+            assert dim % size == 0, (where, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("mesh", [MESH, MESH_MP], ids=["single", "multipod"])
+def test_param_and_opt_specs_valid(arch, mesh):
+    cfg = get_config(arch)
+    model = build(cfg)
+    p_sds = S.param_specs(model)
+    pspecs = rules.param_pspecs(p_sds, cfg, mesh)
+    _check_specs(p_sds, pspecs, mesh, arch)
+
+    o_sds = S.opt_specs(p_sds, optimizers.OptConfig())
+    ospecs = rules.opt_pspecs(pspecs, p_sds, mesh)
+    _check_specs(o_sds.m, ospecs, mesh, arch + "/opt")
+
+
+@pytest.mark.parametrize(
+    "arch,expected",
+    [
+        ("qwen1.5-0.5b", "head"),
+        ("internlm2-20b", "qhead"),
+        ("deepseek-67b", "qhead"),
+        ("stablelm-3b", "head"),
+        ("arctic-480b", "hdim"),
+        ("kimi-k2-1t-a32b", "qhead"),
+        ("zamba2-7b", "head"),
+        ("llava-next-34b", "hdim"),
+        ("whisper-medium", "head"),
+        ("mamba2-780m", "none"),
+    ],
+)
+def test_attention_tp_modes(arch, expected):
+    assert rules.attn_mode(get_config(arch), 16) == expected
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_big_params_are_sharded(arch):
+    """Every leaf >= 64 MiB must be sharded on at least one mesh axis — a
+    replicated multi-GB tensor is a memory bug at 1T scale. Known by-design
+    exceptions: KV weights under Megatron KV duplication (qhead TP mode) and
+    vocab tensors whose size does not divide the model axis (whisper)."""
+    cfg = get_config(arch)
+    model = build(cfg)
+    p_sds = S.param_specs(model)
+    pspecs = rules.param_pspecs(p_sds, cfg, mesh=MESH)
+    flat, _ = rules._tree_paths(p_sds)
+    flat_s = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    dt_bytes = lambda l: np.dtype(l.dtype).itemsize * int(np.prod(l.shape))
+    mode = rules.attn_mode(cfg, 16)
+    for (path, leaf), spec in zip(flat, flat_s):
+        if dt_bytes(leaf) < 64 << 20:
+            continue
+        if mode == "qhead" and ("/wk" in path or "/wv" in path or "/bk" in path or "/bv" in path):
+            continue  # Megatron KV duplication: replicated by design
+        if cfg.vocab_size % 16 and ("embed/tok" in path or "head/w" in path):
+            continue  # vocab not divisible by the model axis
+        assert any(p is not None for p in spec), (arch, path, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_cache_specs_valid(arch):
+    from repro.configs import SHAPES
+
+    cfg = get_config(arch)
+    model = build(cfg)
+    shape = SHAPES["decode_32k"]
+    cache = S.cache_specs(model, shape.global_batch, shape.seq_len)
+    cspecs = rules.cache_pspecs(cache, MESH, shape.global_batch, cfg)
+    flat_c = [l for l in jax.tree.leaves(cache) if hasattr(l, "shape")]
+    flat_s = jax.tree.leaves(cspecs, is_leaf=lambda x: isinstance(x, P))
+    for leaf, spec in zip(flat_c, flat_s):
+        for dim, part in zip(leaf.shape, list(spec)):
+            assert dim % _axis_size(MESH, part) == 0, (arch, leaf.shape, spec)
