@@ -1,9 +1,17 @@
 """Roofline table builder: reads dry-run JSONL results and renders the
-per-(arch x shape) three-term table for EXPERIMENTS.md §Roofline."""
+per-(arch x shape) three-term table for EXPERIMENTS.md §Roofline.
+
+Also benchmarks the FPISA pre-collective transform backends head-to-head
+(``kernel_bench``): pure-jnp block_encode vs the two-pass Pallas pipeline
+(extract -> HBM round-trip -> align) vs the fused single-pass kernel, with
+measured effective bandwidth (useful bytes / wall time) and the analytic HBM
+plane traffic each variant incurs on TPU. The fused kernel must meet or beat
+the two-pass kernel — that is the tentpole claim, measured here rather than
+asserted."""
 import json
 import os
 
-from benchmarks.common import emit
+from benchmarks.common import emit, timeit
 
 RESULTS = [
     ("single", "results/dryrun_single.jsonl"),
@@ -63,7 +71,84 @@ def markdown_table(rows):
     return "\n".join(lines)
 
 
+# ---------------------------------------------------------------------------
+# FPISA transform-kernel roofline: fused vs two-pass vs jnp
+# ---------------------------------------------------------------------------
+
+# analytic plane-sized HBM transfers per variant (reads + writes of (R,B)
+# planes; the (R,) bmax vector is 1/B of a plane and ignored)
+PLANE_TRAFFIC = {"jnp": 2, "two_pass": 8, "fused": 2}
+
+
+def kernel_bench(r=2048, b=256, preshift=1):
+    """Times the three encode->align implementations on an (r, b) f32 grid and
+    returns {variant: {seconds, eff_gbs, planes_moved}}. Effective bandwidth
+    counts only the USEFUL bytes (x in + aligned man out + bmax out) — extra
+    intermediate traffic shows up as lost bandwidth, which is the point."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core import fpisa, numerics as nx
+    from repro.kernels import ops
+
+    x = jnp.asarray(
+        (np.random.default_rng(0).standard_normal((r, b))
+         * np.exp2(np.random.default_rng(1).integers(-8, 8, (r, b)))).astype(np.float32))
+    useful_bytes = x.size * 4 * 2 + r * 4  # read x + write man + write bmax
+    fmt = fpisa.FP32
+
+    @jax.jit
+    def run_jnp(x):
+        planes = fpisa.encode(x, fmt)
+        bmax = jnp.max(planes.exp, axis=-1)
+        be = bmax[:, None]
+        return nx.arshift(planes.man, (be - planes.exp) + preshift), bmax
+
+    @jax.jit
+    def run_two_pass(x):
+        exp, man, bmax = ops.extract(x)
+        return ops.align(exp, man, bmax, preshift=preshift), bmax
+
+    @jax.jit
+    def run_fused(x):
+        man_local, bmax = ops.encode_align(x)
+        # residual shift to the (here: already-global) block exponent — part
+        # of the hot path, so it is timed with the kernel
+        return nx.arshift(man_local, preshift), bmax
+
+    out = {}
+    baseline = None
+    for name, fn in [("jnp", run_jnp), ("two_pass", run_two_pass), ("fused", run_fused)]:
+        dt, res = timeit(fn, x, warmup=2, iters=5)
+        if baseline is None:
+            baseline = res
+        else:  # all three variants must agree bit-for-bit
+            assert np.array_equal(np.asarray(res[0]), np.asarray(baseline[0])), name
+            assert np.array_equal(np.asarray(res[1]), np.asarray(baseline[1])), name
+        out[name] = {
+            "seconds": dt,
+            "eff_gbs": useful_bytes / dt / 1e9,
+            "planes_moved": PLANE_TRAFFIC[name],
+        }
+    return out
+
+
+def kernel_table(rows):
+    lines = ["| variant | time (ms) | effective GB/s | HBM plane transfers |",
+             "|---|---|---|---|"]
+    for name, r in rows.items():
+        lines.append(f"| {name} | {r['seconds']*1e3:.3f} | {r['eff_gbs']:.2f} "
+                     f"| {r['planes_moved']} |")
+    return "\n".join(lines)
+
+
 def run():
+    rows = kernel_bench()
+    for name, r in rows.items():
+        emit(f"roofline.kernel.{name}", r["seconds"] * 1e6,
+             f"eff_gbs={r['eff_gbs']:.3f};planes={r['planes_moved']}")
+    fused_ok = rows["fused"]["eff_gbs"] >= rows["two_pass"]["eff_gbs"]
+    emit("roofline.kernel.fused_ge_two_pass", 0, f"ok={int(fused_ok)}")
     for mesh_name, path in RESULTS:
         rows = load(path)
         ok = sum(1 for r in rows.values() if r["status"] == "ok")
@@ -79,6 +164,8 @@ def run():
 
 
 if __name__ == "__main__":
+    print("==== FPISA transform kernels (fused vs two-pass vs jnp) ====")
+    print(kernel_table(kernel_bench()))
     for name, path in RESULTS:
         rows = load(path)
         if rows:

@@ -31,22 +31,48 @@ wire_bits  : 32 (default), 16 or 8 — beyond-paper compression: mantissas are
 hierarchical: on a multi-pod mesh, reduce-scatter in-pod over `data`, psum
              across `pod`, all-gather in-pod — lets the cross-pod hop use a
              narrower wire than the in-pod hop.
+
+Backends
+--------
+The pre/post-collective transform (encode->align before the psum, decode
+after) is pluggable via ``AggConfig.backend``:
+
+``"jnp"``    : pure jnp ``fpisa.encode`` / ``block_decode`` — portable, XLA
+               decides the fusion. Reference semantics.
+``"pallas"`` : the fused single-pass kernels in ``kernels/fpisa_fused.py`` —
+               one HBM read of the gradient and one write of the mantissa
+               plane per direction; the (exp, man) planes never round-trip
+               through HBM. Mantissas leave the kernel aligned to the LOCAL
+               block max; the residual shift to the cross-worker max composes
+               exactly on top (arithmetic right shifts compose), so the two
+               backends are bit-identical for every strategy, wire width,
+               chunking and format. On CPU hosts the kernels run in Pallas
+               interpret mode (same semantics, for tests).
+``"auto"``   : default — "pallas" on TPU backends, "jnp" elsewhere.
+
+The chunked streaming path (``chunk_elems``) threads the backend through
+unchanged: each scanned chunk runs the fused kernel on its own (chunk/block,
+block) tile grid, so only one chunk's mantissa plane is ever live — the
+whole-tensor planes are never materialized on either backend.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
 from repro.core import fpisa
 from repro.core import numerics as nx
+from repro.kernels import fpisa_fused
 
 DEFAULT_BLOCK = 256
+
+BACKENDS = ("auto", "jnp", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,14 +89,74 @@ class AggConfig:
     # planes. 0 disables chunking. Chunking also matches the switch reality:
     # aggregation is streamed per-packet, never whole-tensor.
     chunk_elems: int = 0
+    # encode/decode transform backend: "jnp" | "pallas" | "auto" (module doc).
+    backend: str = "auto"
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {self.backend!r}")
 
     @property
     def fmt(self) -> fpisa.FpFormat:
         return fpisa.FORMATS[self.fmt_name]
 
 
+def resolve_backend(backend: str) -> str:
+    """Map "auto" to the best backend for the current jax platform."""
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return backend
+
+
+def _interpret() -> bool:
+    # On non-TPU hosts the Pallas kernels run under the interpreter (bit-exact
+    # same semantics) so the TPU code path is testable everywhere.
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# backend layer: encode->align (pre-collective) / decode (post-collective)
+# ---------------------------------------------------------------------------
+
+
+def _encode_align(flat: jax.Array, axes, shift: int, cfg: AggConfig, backend: str):
+    """flat (N,) packed FP -> (man (N,) int32 aligned to the cross-worker
+    block exponent and pre-shifted by ``shift``, bmax (N/block,) int32).
+
+    Runs the tiny per-block max-exponent pmax internally (it must sit between
+    the local extract and the final alignment). The pallas backend does the
+    extract+local-align in ONE fused HBM pass and finishes with the residual
+    per-element shift, which XLA fuses into the wire cast; the jnp backend is
+    the reference formulation. Both are bit-identical (shift composition)."""
+    if backend == "pallas":
+        x2 = flat.reshape(-1, cfg.block)
+        man_local, local_bmax = fpisa_fused.fused_encode_align(
+            x2, fmt_name=cfg.fmt_name, interpret=_interpret())
+        bmax = lax.pmax(local_bmax, axes)
+        man = nx.arshift(man_local, (bmax - local_bmax)[:, None] + shift)
+        return man.reshape(-1), bmax
+    planes = fpisa.encode(flat, cfg.fmt)
+    local_bmax = fpisa.block_max_exponent(planes.exp, cfg.block)
+    bmax = lax.pmax(local_bmax, axes)
+    be = jnp.repeat(bmax, cfg.block, axis=-1)
+    man = nx.arshift(planes.man, (be - planes.exp) + shift)
+    return man, bmax
+
+
+def _decode(man_sum: jax.Array, bmax: jax.Array, shift: int, cfg: AggConfig,
+            backend: str):
+    """(N,) aggregated mantissas (any wire dtype) + (N/block,) block exps ->
+    (N,) packed FP via delayed renormalization."""
+    if backend == "pallas":
+        out2 = fpisa_fused.fused_decode(
+            man_sum.reshape(-1, cfg.block), bmax, preshift=shift,
+            fmt_name=cfg.fmt_name, interpret=_interpret())
+        return out2.reshape(-1)
+    return fpisa.block_decode(man_sum.astype(jnp.int32), bmax, cfg.block, shift, cfg.fmt)
+
+
 def _axis_size(axis_names: Sequence[str]) -> int:
-    return math.prod(lax.axis_size(a) for a in axis_names)
+    return math.prod(compat.axis_size(a) for a in axis_names)
 
 
 def _flatten_pad(x: jax.Array, block: int):
@@ -160,25 +246,22 @@ def fpisa_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
     axes = tuple(axis_names)
     w = _axis_size(axes)
     fmt = cfg.fmt
+    backend = resolve_backend(cfg.backend)
     orig_shape, orig_dtype = x.shape, x.dtype
     flat, pad = _flatten_pad(x.astype(_PACKED[cfg.fmt_name]), cfg.block)
 
-    planes = fpisa.encode(flat, fmt)  # single encode: exp+man planes
-    local_bmax = fpisa.block_max_exponent(planes.exp, cfg.block)
-    # Tiny collective: one int per block (1/block of the data, and it can ride
-    # in int8 on real hardware). Unlike SwitchML this is NOT a host round trip;
-    # it pipelines with the mantissa pass chunk-by-chunk.
-    bmax = lax.pmax(local_bmax, axes)
-
     shift = _wire_shift(fmt, w, cfg.wire_bits)
-    be = jnp.repeat(bmax, cfg.block, axis=-1)
-    man = nx.arshift(planes.man, (be - planes.exp) + shift)
+    # The per-block max-exponent pmax inside _encode_align is a tiny
+    # collective: one int per block (1/block of the data, and it can ride in
+    # int8 on real hardware). Unlike SwitchML this is NOT a host round trip;
+    # it pipelines with the mantissa pass chunk-by-chunk.
+    man, bmax = _encode_align(flat, axes, shift, cfg, backend)
     if cfg.wire_bits == 16:
         man = man.astype(jnp.int16)
     elif cfg.wire_bits == 8:
         man = man.astype(jnp.int8)
     man_sum = lax.psum(man, axes)
-    out = fpisa.block_decode(man_sum.astype(jnp.int32), bmax, cfg.block, shift, fmt)
+    out = _decode(man_sum, bmax, shift, cfg, backend)
     return _unflatten(out, pad, orig_shape, orig_dtype)
 
 
@@ -197,10 +280,11 @@ def fpisa_allreduce_hierarchical(
     compatible across levels; the sum stays in integer domain end-to-end and
     renormalization happens ONCE (delayed, as in the paper).
     """
-    w_data = lax.axis_size(data_axis)
-    w_pod = lax.axis_size(pod_axis)
+    w_data = compat.axis_size(data_axis)
+    w_pod = compat.axis_size(pod_axis)
     w = w_data * w_pod
     fmt = cfg.fmt
+    backend = resolve_backend(cfg.backend)
     orig_shape, orig_dtype = x.shape, x.dtype
     # pad to block * w_data so reduce_scatter tiles evenly
     quantum = cfg.block * w_data
@@ -209,13 +293,10 @@ def fpisa_allreduce_hierarchical(
     if pad:
         flat = jnp.pad(flat, (0, pad))
 
-    planes = fpisa.encode(flat, fmt)
-    local_bmax = fpisa.block_max_exponent(planes.exp, cfg.block)
-    bmax = lax.pmax(local_bmax, (data_axis, pod_axis))
-
     shift = _wire_shift(fmt, w, cfg.wire_bits)
-    be = jnp.repeat(bmax, cfg.block, axis=-1)
-    man = nx.arshift(planes.man, (be - planes.exp) + shift)
+    # exponent agreement is global (pmax over both axes) so mantissa scales
+    # are compatible across both reduction levels
+    man, bmax = _encode_align(flat, (data_axis, pod_axis), shift, cfg, backend)
 
     # level 1: in-pod reduce-scatter (int32 wire on ICI)
     man_shard = lax.psum_scatter(man, data_axis, scatter_dimension=0, tiled=True)
@@ -234,13 +315,13 @@ def fpisa_allreduce_hierarchical(
             man_shard = man_shard.astype(jnp.int16)
         elif pod_bits == 8:
             man_shard = man_shard.astype(jnp.int8)
-    man_shard = lax.psum(man_shard, pod_axis).astype(jnp.int32)
+    man_shard = lax.psum(man_shard, pod_axis)
     # delayed renorm on the owned shard only, then gather packed FP32
     nblk = man.shape[0] // cfg.block
     idx = lax.axis_index(data_axis)
     blocks_per_shard = nblk // w_data
     bmax_shard = lax.dynamic_slice_in_dim(bmax, idx * blocks_per_shard, blocks_per_shard)
-    out_shard = fpisa.block_decode(man_shard, bmax_shard, cfg.block, shift + pod_shift, fmt)
+    out_shard = _decode(man_shard, bmax_shard, shift + pod_shift, cfg, backend)
     out = lax.all_gather(out_shard, data_axis, axis=0, tiled=True)
     return _unflatten(out, pad, orig_shape, orig_dtype)
 

@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# FPISA Pallas kernel package: the pre/post-collective transform hot path
+# (fpisa_fused.py single-pass kernels + two-pass reference kernels), their
+# jit'd wrappers (ops.py) and pure-jnp oracles (ref.py). See README.md here
+# for the pipeline diagram, backend flag, and VMEM tiling budget.

@@ -19,31 +19,52 @@ from repro.kernels import ref
 from repro.kernels.fpisa_accum import fpisa_accum
 from repro.kernels.fpisa_decode import fpisa_decode
 from repro.kernels.fpisa_encode import fpisa_align, fpisa_extract
+from repro.kernels.fpisa_fused import fused_decode, fused_encode_align
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+def _interpret() -> bool:
+    # Interpret everywhere except a real TPU backend: the kernel bodies run
+    # exactly as written (bit-identical semantics), so non-TPU hosts — CPU
+    # *and* GPU — validate the TPU code path instead of attempting a Mosaic
+    # compile that cannot succeed off-TPU.
+    return jax.default_backend() != "tpu"
 
 
 def extract(x: jax.Array, fmt_name: str = "fp32", use_pallas: bool = True):
     if not use_pallas:
         return ref.extract_ref(x, fpisa.FORMATS[fmt_name])
-    return fpisa_extract(x, fmt_name=fmt_name, interpret=_on_cpu())
+    return fpisa_extract(x, fmt_name=fmt_name, interpret=_interpret())
 
 
 def align(exp, man, bmax, preshift: int = 0, use_pallas: bool = True):
     if not use_pallas:
         return ref.align_ref(exp, man, bmax, preshift)
-    return fpisa_align(exp, man, bmax, preshift=preshift, interpret=_on_cpu())
+    return fpisa_align(exp, man, bmax, preshift=preshift, interpret=_interpret())
 
 
 def decode(man_sum, bmax, preshift: int = 0, fmt_name: str = "fp32", use_pallas: bool = True):
     if not use_pallas:
         return ref.decode_ref(man_sum, bmax, preshift)
-    return fpisa_decode(man_sum, bmax, preshift=preshift, fmt_name=fmt_name, interpret=_on_cpu())
+    return fpisa_decode(man_sum, bmax, preshift=preshift, fmt_name=fmt_name, interpret=_interpret())
 
 
 def accum(x, variant: str = "fpisa_a", fmt_name: str = "fp32", use_pallas: bool = True):
     if not use_pallas:
         return ref.accum_ref(x, variant=variant)
-    return fpisa_accum(x, variant=variant, fmt_name=fmt_name, interpret=_on_cpu())
+    return fpisa_accum(x, variant=variant, fmt_name=fmt_name, interpret=_interpret())
+
+
+def encode_align(x, fmt_name: str = "fp32", use_pallas: bool = True):
+    """Fused single-pass extract+align to the LOCAL block max (hot path)."""
+    if not use_pallas:
+        return ref.fused_encode_align_ref(x, fpisa.FORMATS[fmt_name])
+    return fused_encode_align(x, fmt_name=fmt_name, interpret=_interpret())
+
+
+def decode_fused(man_sum, bmax, preshift: int = 0, fmt_name: str = "fp32",
+                 use_pallas: bool = True):
+    """Fused decode accepting narrow wire dtypes (int8/int16/int32)."""
+    if not use_pallas:
+        return ref.fused_decode_ref(man_sum, bmax, preshift, fpisa.FORMATS[fmt_name])
+    return fused_decode(man_sum, bmax, preshift=preshift, fmt_name=fmt_name,
+                        interpret=_interpret())

@@ -47,6 +47,29 @@ def decode_ref(
     return fpisa.renormalize(fpisa.Planes(exp=e, man=man_sum), fmt)
 
 
+def fused_encode_align_ref(x: jax.Array, fmt: fpisa.FpFormat = fpisa.FP32):
+    """Oracle for the fused single-pass kernel: x (R,B) packed FP ->
+    (man (R,B) i32 aligned to the LOCAL per-block max, bmax (R,) i32).
+
+    Defined as the extract_ref + align_ref composition with preshift=0 against
+    the local bmax — the fused kernel must match it bit-for-bit; the residual
+    cross-worker shift composes exactly on top (see fpisa_fused module doc).
+    """
+    exp, man, bmax = extract_ref(x, fmt)
+    return align_ref(exp, man, bmax, 0, fmt), bmax
+
+
+def fused_decode_ref(
+    man_sum: jax.Array,
+    bmax: jax.Array,
+    preshift: int,
+    fmt: fpisa.FpFormat = fpisa.FP32,
+):
+    """Oracle for fused_decode: identical to decode_ref plus the wire-dtype
+    upcast the kernel performs in-VMEM."""
+    return decode_ref(man_sum.astype(jnp.int32), bmax, preshift, fmt)
+
+
 def accum_ref(x: jax.Array, variant: str = "fpisa_a", fmt: fpisa.FpFormat = fpisa.FP32):
     """Sequential switch-order accumulation. x: (W, R, B) -> (R, B) packed FP."""
     w = x.shape[0]

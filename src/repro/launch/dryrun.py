@@ -127,7 +127,8 @@ def active_param_count(cfg) -> float:
 
 def build_cell(arch: str, shape_name: str, mesh, agg_strategy: str = "fpisa",
                overrides: dict | None = None, wire_bits: int = 32,
-               pod_wire_bits=None, agg_chunk: int = 0, agg_fmt: str = "fp32"):
+               pod_wire_bits=None, agg_chunk: int = 0, agg_fmt: str = "fp32",
+               agg_backend: str = "auto"):
     """Returns (jitted fn, kwargs of ShapeDtypeStructs with shardings)."""
     cfg = get_config(arch)
     if overrides:
@@ -167,7 +168,7 @@ def build_cell(arch: str, shape_name: str, mesh, agg_strategy: str = "fpisa",
         )
         agg = AggConfig(strategy=agg_strategy, wire_bits=wire_bits,
                         pod_wire_bits=pod_wire_bits, chunk_elems=agg_chunk,
-                        fmt_name=agg_fmt)
+                        fmt_name=agg_fmt, backend=agg_backend)
         step = make_train_step(model, mesh, agg, opt_cfg, shape.global_batch,
                                accum_steps=cfg.accum_steps)
         # donate params + optimizer state: in-place update, halves peak memory
@@ -192,7 +193,7 @@ def build_cell(arch: str, shape_name: str, mesh, agg_strategy: str = "fpisa",
 def run_cell(arch: str, shape_name: str, multi_pod: bool, agg_strategy: str = "fpisa",
              overrides: dict | None = None, save_hlo: str | None = None,
              wire_bits: int = 32, pod_wire_bits=None, agg_chunk: int = 0,
-             agg_fmt: str = "fp32") -> dict:
+             agg_fmt: str = "fp32", agg_backend: str = "auto") -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     nd = mesh.devices.size
     cfg = get_config(arch)
@@ -213,7 +214,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, agg_strategy: str = "f
     try:
         jax.sharding.set_mesh(mesh)  # enables in-model sharding hints
         fn, args = build_cell(arch, shape_name, mesh, agg_strategy, overrides,
-                              wire_bits, pod_wire_bits, agg_chunk, agg_fmt)
+                              wire_bits, pod_wire_bits, agg_chunk, agg_fmt,
+                              agg_backend)
         lowered = fn.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -278,6 +280,8 @@ def main():
     ap.add_argument("--pod-wire-bits", type=int, default=None)
     ap.add_argument("--agg-chunk", type=int, default=0)
     ap.add_argument("--agg-fmt", default="fp32")
+    ap.add_argument("--agg-backend", default="auto", choices=["auto", "jnp", "pallas"],
+                    help="encode/decode transform backend (core/allreduce.py)")
     ap.add_argument("--out", default=None, help="append JSON lines here")
     ap.add_argument("--save-hlo", default=None)
     ap.add_argument("--override", action="append", default=[],
@@ -301,7 +305,7 @@ def main():
             rec = run_cell(arch, shape, args.multi_pod, args.agg,
                            overrides or None, args.save_hlo,
                            args.wire_bits, args.pod_wire_bits, args.agg_chunk,
-                           args.agg_fmt)
+                           args.agg_fmt, args.agg_backend)
             line = json.dumps(rec)
             print(line, flush=True)
             if args.out:

@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh
 
+from repro import compat
 from repro.runtime import checkpoint as ckpt
 from repro.sharding import rules
 
@@ -21,10 +22,10 @@ def make_mesh_for(devices=None, model_parallel: int = 1, pods: int = 1):
     assert n % (model_parallel * pods) == 0
     data = n // (model_parallel * pods)
     if pods > 1:
-        return jax.make_mesh((pods, data, model_parallel), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model_parallel), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return compat.make_mesh((pods, data, model_parallel), ("pod", "data", "model"),
+                                devices=devices)
+    return compat.make_mesh((data, model_parallel), ("data", "model"),
+                            devices=devices)
 
 
 def resume_on_mesh(ckpt_dir: str, like_params, like_opt, cfg, mesh: Mesh):

@@ -126,6 +126,20 @@ def _tree_paths(tree):
 _STACKED_RE = re.compile(r"(^|/)(layers|tail_layers|enc_layers|dec_layers)(/|$)")
 
 
+def _drop_missing_axes(spec: P, mesh) -> P:
+    """Null out mesh axes a rule names but this mesh doesn't have (e.g. a
+    pure-DP (pod, data) mesh has no 'model' axis — those dims replicate)."""
+    names = set(mesh.axis_names)
+
+    def keep(p):
+        if isinstance(p, tuple):
+            kept = tuple(a for a in p if a in names)
+            return kept if kept else None
+        return p if (p is None or p in names) else None
+
+    return P(*(keep(p) for p in spec))
+
+
 def param_pspecs(params, cfg, mesh: Mesh):
     """PartitionSpec pytree mirroring `params` (shape-dtype structs are fine)."""
     m = mesh.shape.get("model", 1)
@@ -138,7 +152,8 @@ def param_pspecs(params, cfg, mesh: Mesh):
         if stacked:
             extra = 2 if (cfg.family == "hybrid" and path.startswith("layers/")) else 1
         spec = _param_spec(path, leaf.ndim - extra, cfg, m, dsz)
-        specs.append(P(*([None] * extra + list(spec))))
+        spec = _drop_missing_axes(P(*([None] * extra + list(spec))), mesh)
+        specs.append(spec)
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
@@ -166,8 +181,11 @@ def opt_pspecs(param_specs, params, mesh: Mesh):
 
 
 def named(mesh: Mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree. Axes a rule names but this
+    mesh doesn't have are dropped here, at the point where every spec producer
+    (param/opt/cache/input) meets a concrete mesh."""
     return jax.tree.map(
-        lambda s: NamedSharding(mesh, s), spec_tree,
+        lambda s: NamedSharding(mesh, _drop_missing_axes(s, mesh)), spec_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
 

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
 from repro.models import transformer as T
 from repro.models.layers import embed, rms_norm
 
@@ -53,7 +54,7 @@ def pipeline_forward(params, batch, cfg, *, stage_axis: str, n_micro: int):
     the LOCAL stage chunk (L/n_stages, ...); other params replicated.
     Returns logits for the full batch (valid on the last stage, broadcast to
     all stages for loss uniformity)."""
-    n = lax.axis_size(stage_axis)
+    n = compat.axis_size(stage_axis)
     sid = lax.axis_index(stage_axis)
     toks = batch["tokens"]
     b, s = toks.shape
@@ -121,7 +122,7 @@ def make_pp_loss(cfg, mesh: Mesh, stage_axis: str = "pod", n_micro: int = 4):
             },
             jax.tree.map(lambda _: P(), batch),
         )
-        return jax.shard_map(
+        return compat.shard_map(
             loss_inner, mesh=mesh, in_specs=in_specs, out_specs=P(),
             axis_names={stage_axis}, check_vma=False,
         )(params_staged, batch)

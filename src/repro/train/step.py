@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.allreduce import AggConfig, allreduce_tree
 from repro.optim import optimizers
 from repro.sharding import rules
@@ -88,8 +89,6 @@ def make_train_step(model, mesh: Mesh, agg: AggConfig, opt_cfg: optimizers.OptCo
             loss = jax.lax.pmean(loss, boundary)
             return loss, grads
 
-        auto = frozenset(a for a in mesh.axis_names if a not in boundary)
-
         def batch_spec(leaf):
             return P(*( [manual_batch_axes if manual_batch_axes else None]
                        + [None] * (leaf.ndim - 1)))
@@ -99,7 +98,7 @@ def make_train_step(model, mesh: Mesh, agg: AggConfig, opt_cfg: optimizers.OptCo
                 jax.tree.map(lambda _: P(), params),
                 jax.tree.map(batch_spec, batch),
             )
-            return jax.shard_map(
+            return compat.shard_map(
                 sharded_grads,
                 mesh=mesh,
                 in_specs=in_specs,

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Canonical test entry point — run from the repo root or tests/:
+#   bash tests/run.sh                 # whole suite (the tier-1 command)
+#   bash tests/run.sh tests/test_fpisa.py -k roundtrip
+#
+# Exports the same environment the CI / tier-1 gate uses so multi-device
+# shard_map tests and local runs behave identically everywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# https://github.com/tensorflow/tensorflow/blob/master/tensorflow/compiler/xla/xla.proto
+# 8 host devices so shard_map collectives are exercised without TPUs. The
+# in-process tests keep seeing 1 logical problem per device; the heavy
+# multi-device cases still run in subprocesses (tests/conftest.py), which
+# inherit and re-export the same flag.
+export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+export PYTHONPATH="$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
+export TF_CPP_MIN_LOG_LEVEL=${TF_CPP_MIN_LOG_LEVEL:-4}  # silence XLA chatter
+
+/usr/bin/env python3 -m pytest -x -q "$@"

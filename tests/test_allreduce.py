@@ -7,17 +7,18 @@ import pytest
 CODE = r"""
 import numpy as np, jax
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.core import allreduce as AR
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = compat.make_mesh((2, 4), ("pod", "data"))
 x = (np.random.default_rng(0).standard_normal((8, 5000)) * 0.01).astype(np.float32)
 ref = x.astype(np.float64).sum(0)
 scale = np.abs(ref).max()
 
 def run(cfg):
-    fn = jax.jit(jax.shard_map(lambda xs: AR.allreduce(xs[0], ("pod","data"), cfg),
-                               mesh=mesh, in_specs=P(("pod","data")), out_specs=P(),
-                               check_vma=False))
+    fn = jax.jit(compat.shard_map(lambda xs: AR.allreduce(xs[0], ("pod","data"), cfg),
+                                  mesh=mesh, in_specs=P(("pod","data")), out_specs=P(),
+                                  check_vma=False))
     return np.asarray(fn(x.reshape(8,1,5000)))
 
 results = {}
@@ -39,9 +40,9 @@ assert results["fpisa_seq-32-None"]< 1e-5, results
 # worker order (int add is associative+commutative) — the paper's
 # reproducibility claim, strengthened to order-independence by our block path
 cfg = AR.AggConfig(strategy="fpisa")
-fn = jax.jit(jax.shard_map(lambda xs: AR.allreduce(xs[0], ("pod","data"), cfg),
-                           mesh=mesh, in_specs=P(("pod","data")), out_specs=P(),
-                           check_vma=False))
+fn = jax.jit(compat.shard_map(lambda xs: AR.allreduce(xs[0], ("pod","data"), cfg),
+                              mesh=mesh, in_specs=P(("pod","data")), out_specs=P(),
+                              check_vma=False))
 a = np.asarray(fn(x.reshape(8,1,5000)))
 perm = np.random.default_rng(1).permutation(8)
 b = np.asarray(fn(x[perm].reshape(8,1,5000)))
@@ -58,6 +59,7 @@ def test_allreduce_strategies_multi_device(multi_device_runner):
 TRAIN_CODE = r"""
 import numpy as np, jax
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import compat
 from repro.configs import get_smoke_config
 from repro.models.registry import build
 from repro.core.allreduce import AggConfig
@@ -66,8 +68,15 @@ from repro.sharding import rules
 from repro.train.step import make_train_step
 from repro.data.pipeline import SyntheticCorpus, ShardedLoader
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+# Modern jax: the production-shaped 3-axis mesh, exercising the PARTIALLY
+# manual shard_map (manual replica axes + auto 'model') the real fleet uses.
+# Old-jax XLA cannot partition that shape (SPMD IsManualSubgroup check
+# failure), so there we fall back to a fully-manual pure-DP mesh — strategy
+# equivalence itself is orthogonal to TP.
+if hasattr(jax, "shard_map"):
+    mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
+else:
+    mesh = compat.make_mesh((2, 4), ("pod", "data"))
 cfg = get_smoke_config("internlm2-20b").with_(num_kv_heads=2, num_heads=8)
 model = build(cfg)
 params0 = model.init(jax.random.PRNGKey(0))

@@ -1,0 +1,116 @@
+"""Fused single-pass kernel validation (kernels/fpisa_fused.py).
+
+Bit-exactness vs the pure-jnp oracles in kernels/ref.py, swept over shapes
+(including R not divisible by TILE_R), block widths B in {128, 256, 512},
+formats (fp32/fp16/bf16) and wire dtypes — all in Pallas interpret mode on
+CPU (identical semantics to the compiled TPU kernels)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import fpisa, numerics as nx
+from repro.kernels import ops, ref
+from repro.kernels.fpisa_encode import TILE_R
+
+RNG = np.random.default_rng(7)
+
+# R values straddle the TILE_R=256 grid: 1 row, sub-tile, exact tiles, and
+# ragged last tiles (300 = 256 + 44, 513 = 2*256 + 1).
+SHAPES = [(1, 256), (8, 128), (256, 256), (300, 256), (513, 128), (64, 512)]
+assert any(r % TILE_R for r, _ in SHAPES), "sweep must cover ragged grids"
+
+FMT_DTYPE = {"fp32": jnp.float32, "fp16": jnp.float16, "bf16": jnp.bfloat16}
+
+
+def _data(r, b, fmt_name="fp32"):
+    x = RNG.standard_normal((r, b)).astype(np.float32)
+    # spread exponents, but keep within fp16's narrow normal range
+    span = 4 if fmt_name == "fp16" else 12
+    x = x * np.exp2(RNG.integers(-span, span, (r, b))).astype(np.float32)
+    x = jnp.asarray(x, FMT_DTYPE[fmt_name])
+    # flush subnormals so packed values are exactly representable planes
+    fmt = fpisa.FORMATS[fmt_name]
+    tiny = np.float32(2.0 ** (1 - fmt.bias))
+    return jnp.where(jnp.abs(x.astype(jnp.float32)) < tiny, 0, x.astype(jnp.float32)).astype(FMT_DTYPE[fmt_name])
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("fmt_name", ["fp32", "fp16", "bf16"])
+def test_fused_encode_align_matches_oracle(shape, fmt_name):
+    x = _data(*shape, fmt_name)
+    m_k, b_k = ops.encode_align(x, fmt_name=fmt_name)
+    m_r, b_r = ref.fused_encode_align_ref(x, fpisa.FORMATS[fmt_name])
+    assert np.array_equal(m_k, m_r)
+    assert np.array_equal(b_k, b_r)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("preshift", [0, 2])
+def test_fused_equals_two_pass_composition(shape, preshift):
+    """fused local-align + residual shift == extract_ref -> align_ref against
+    the cross-worker exponent (the bit-exactness claim the backend relies on)."""
+    x = _data(*shape)
+    exp, man, bmax = ref.extract_ref(x)
+    # simulate another worker having raised some block exponents via pmax
+    bump = jnp.asarray(RNG.integers(0, 4, bmax.shape), jnp.int32)
+    global_bmax = bmax + bump
+    direct = ref.align_ref(exp, man, global_bmax, preshift)
+
+    m_local, b_local = ops.encode_align(x)
+    composed = nx.arshift(m_local, (global_bmax - b_local)[:, None] + preshift)
+    assert np.array_equal(composed, direct)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("fmt_name", ["fp32", "fp16", "bf16"])
+@pytest.mark.parametrize("wire_dtype", [jnp.int32, jnp.int16])
+def test_fused_decode_matches_oracle(shape, fmt_name, wire_dtype):
+    fmt = fpisa.FORMATS[fmt_name]
+    x = _data(*shape, fmt_name)
+    exp, man, bmax = ref.extract_ref(x, fmt)
+    preshift = 3  # room so int16 wire holds fp16/bf16 mantissas exactly
+    aligned = ref.align_ref(exp, man, bmax, preshift, fmt)
+    if wire_dtype != jnp.int32:
+        if fmt_name == "fp32":
+            pytest.skip("fp32 mantissas do not fit an int16 wire without extra shift")
+        aligned = aligned.astype(wire_dtype)
+    d_k = ops.decode_fused(aligned, bmax, preshift=preshift, fmt_name=fmt_name)
+    d_r = ref.fused_decode_ref(aligned, bmax, preshift, fmt)
+    view = np.int32 if fmt_name == "fp32" else np.int16
+    assert np.array_equal(np.asarray(d_k).view(view), np.asarray(d_r).view(view))
+
+
+def test_fused_pipeline_equals_core_block_path():
+    """fused encode_align -> residual shift -> decode == the pure-core
+    block_encode/block_decode path used by the jnp backend."""
+    from repro.core import fpisa as F
+
+    x = _data(64, 256)
+    m_local, b_local = ops.encode_align(x)
+    man = nx.arshift(m_local, (b_local - b_local)[:, None] + 1)
+    out = ops.decode_fused(man, b_local, preshift=1)
+
+    p = F.encode(x)
+    be = F.block_max_exponent(p.exp, 256)
+    man_ref = F.block_encode(x, be, 256, 1)
+    expect = F.block_decode(man_ref, be, 256, 1)
+    assert np.array_equal(np.asarray(out).view(np.int32),
+                          np.asarray(expect).view(np.int32))
+
+
+def test_fused_zero_and_special_inputs():
+    """All-zero tiles and NaN/Inf clamping flow through the fused path with
+    the same semantics as fpisa.encode (specials clamp to max finite)."""
+    z = jnp.zeros((8, 256), jnp.float32)
+    m, b = ops.encode_align(z)
+    assert np.array_equal(m, np.zeros((8, 256), np.int32))
+    assert np.array_equal(b, np.zeros((8,), np.int32))
+    out = ops.decode_fused(m, b, preshift=0)
+    assert np.array_equal(np.asarray(out), np.zeros((8, 256), np.float32))
+
+    x = jnp.full((8, 256), jnp.inf, jnp.float32).at[0, 0].set(jnp.nan)
+    m_k, b_k = ops.encode_align(x)
+    m_r, b_r = ref.fused_encode_align_ref(x)
+    assert np.array_equal(m_k, m_r)
+    assert np.array_equal(b_k, b_r)

@@ -6,18 +6,17 @@ import pytest
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import ARCH_NAMES, get_config
 from repro.launch import specs as S
 from repro.models.registry import build
 from repro.optim import optimizers
 from repro.sharding import rules
 
-MESH = AbstractMesh((16, 16), ("data", "model"),
-                    axis_types=(jax.sharding.AxisType.Auto,) * 2)
-MESH_MP = AbstractMesh((2, 16, 16), ("pod", "data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 3)
+MESH = compat.abstract_mesh((16, 16), ("data", "model"))
+MESH_MP = compat.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _axis_size(mesh, part):
