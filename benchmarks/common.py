@@ -1,5 +1,9 @@
 """Shared benchmark helpers. Every benchmark prints `name,us_per_call,derived`
-CSV rows via `emit`."""
+CSV rows via `emit`, and persists machine-readable results via `write_json`
+(the perf-trajectory files the roadmap tracks)."""
+import json
+import os
+import platform
 import time
 
 import jax
@@ -18,3 +22,44 @@ def timeit(fn, *args, warmup=2, iters=5):
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def results_path(name: str) -> str:
+    """Where BENCH_<name>.json lands: $BENCH_DIR if set, else the CWD."""
+    return os.path.join(os.environ.get("BENCH_DIR", "."), f"BENCH_{name}.json")
+
+
+def write_json(name: str, payload: dict) -> str:
+    """Write a benchmark's machine-readable results to BENCH_<name>.json.
+
+    The payload is wrapped with enough provenance (backend, device count,
+    host) for trajectory tooling to compare runs apples-to-apples."""
+    doc = {
+        "bench": name,
+        "jax_backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "host": platform.node(),
+        "results": _jsonable(payload),
+    }
+    path = results_path(name)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit(f"{name}.json", 0, f"wrote={path}")
+    return path
+
+
+def _jsonable(x):
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    if isinstance(x, (np.floating,)):
+        return float(x)
+    if isinstance(x, np.ndarray):
+        return _jsonable(x.tolist())
+    if isinstance(x, (np.bool_,)):
+        return bool(x)
+    return x

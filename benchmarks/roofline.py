@@ -11,7 +11,7 @@ asserted."""
 import json
 import os
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, timeit, write_json
 
 RESULTS = [
     ("single", "results/dryrun_single.jsonl"),
@@ -149,6 +149,7 @@ def run():
              f"eff_gbs={r['eff_gbs']:.3f};planes={r['planes_moved']}")
     fused_ok = rows["fused"]["eff_gbs"] >= rows["two_pass"]["eff_gbs"]
     emit("roofline.kernel.fused_ge_two_pass", 0, f"ok={int(fused_ok)}")
+    write_json("roofline", {"kernels": rows, "fused_ge_two_pass": bool(fused_ok)})
     for mesh_name, path in RESULTS:
         rows = load(path)
         ok = sum(1 for r in rows.values() if r["status"] == "ok")

@@ -6,17 +6,38 @@
 3. Show the paper's headline numerics: tiny error, bounded overwrite events,
    bit-exact reproducibility for the production path.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+The production path honors the same knobs as the launch CLIs
+(launch/train.py, launch/dryrun.py):
+  --agg-backend {auto,jnp,pallas}   encode/decode transform backend
+  --chunk-elems N                   stream the gradient in N-element chunks
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--agg-backend jnp]
 """
+import argparse
+
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import fpisa as F
 from repro.core import numerics as nx
+from repro.core.allreduce import resolve_backend
+from repro.kernels import fpisa_fused
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--agg-backend", default="auto", choices=["auto", "jnp", "pallas"],
+                help="pre/post-aggregation transform backend (matches the "
+                     "launch/train.py --agg-backend flag)")
+ap.add_argument("--chunk-elems", type=int, default=0,
+                help="process the flattened gradient in chunks of this many "
+                     "elements (matches launch/dryrun.py --agg-chunk; 0 = "
+                     "whole-tensor)")
+args = ap.parse_args()
+backend = resolve_backend(args.agg_backend)
 
 rng = np.random.default_rng(0)
-W, N = 8, 1 << 16
+W, N, BLOCK = 8, 1 << 16, 256
 grads = (rng.standard_normal((W, N)) * 0.01).astype(np.float32)
 
 # --- 1. the representation (paper Fig. 3) ---
@@ -36,19 +57,46 @@ print(f"\nFPISA-A (switch arrival order): p50 err {np.quantile(err,0.5):.2e}, "
       f"p99 {np.quantile(err,0.99):.2e}, overwrites {int(stats['overwrite'])} "
       f"of {W*N} adds (paper: rare, <0.9%)")
 
-# production block-integer path (what the training framework uses)
-p = F.encode(jnp.asarray(grads).reshape(-1))
-pe = p.exp.reshape(W, N)
-bmax = jnp.max(F.block_max_exponent(pe, 256), axis=0)  # "pmax across workers"
-s = nx.required_preshift(W)
-man = jnp.stack([F.block_encode(jnp.asarray(grads[w]), bmax, 256, s) for w in range(W)])
-man_sum = man.sum(0)  # "integer psum" — associative, reproducible
-out = F.block_decode(man_sum, bmax, 256, s)
+
+# production block-integer path (what the training framework uses), on the
+# selected transform backend, optionally streamed chunk by chunk
+def block_aggregate(chunk: np.ndarray) -> jnp.ndarray:
+    """chunk: (W, M) with M % BLOCK == 0 -> aggregated (M,) float32."""
+    s = nx.required_preshift(W)
+    if backend == "pallas":
+        # fused single-pass kernels (interpret mode off-TPU), local block max
+        # + exact residual shift to the cross-worker max — bit-identical to
+        # the jnp formulation (shift composition, see kernels/README.md)
+        interp = jax.default_backend() != "tpu"
+        mans, bmaxs = zip(*(fpisa_fused.fused_encode_align(
+            jnp.asarray(chunk[w]).reshape(-1, BLOCK),
+            interpret=interp) for w in range(W)))
+        bmax = jnp.max(jnp.stack(bmaxs), axis=0)
+        man = jnp.stack([
+            nx.arshift(m, (bmax - bm)[:, None] + s) for m, bm in zip(mans, bmaxs)])
+        man_sum = man.sum(0)
+        return fpisa_fused.fused_decode(
+            man_sum, bmax, preshift=s, interpret=interp).reshape(-1)
+    p = F.encode(jnp.asarray(chunk).reshape(-1))
+    pe = p.exp.reshape(W, chunk.shape[1])
+    bmax = jnp.max(F.block_max_exponent(pe, BLOCK), axis=0)  # "pmax across workers"
+    man = jnp.stack([F.block_encode(jnp.asarray(chunk[w]), bmax, BLOCK, s)
+                     for w in range(W)])
+    man_sum = man.sum(0)  # "integer psum" — associative, reproducible
+    return F.block_decode(man_sum, bmax, BLOCK, s)
+
+
+chunk = args.chunk_elems or N
+assert chunk % BLOCK == 0, "--chunk-elems must be a multiple of 256"
+out = jnp.concatenate([block_aggregate(grads[:, lo:lo + chunk])
+                       for lo in range(0, N, chunk)])
 err2 = np.abs(np.asarray(out, np.float64) - exact)
-print(f"FPISA block-integer psum:       p99 err {np.quantile(err2,0.99):.2e}")
+print(f"FPISA block-integer psum [{backend}"
+      f"{', chunked' if args.chunk_elems else ''}]: "
+      f"p99 err {np.quantile(err2,0.99):.2e}")
 
 perm = rng.permutation(W)
-man_sum2 = man[perm].sum(0)
-out2 = F.block_decode(man_sum2, bmax, 256, s)
+out2 = jnp.concatenate([block_aggregate(grads[perm][:, lo:lo + chunk])
+                        for lo in range(0, N, chunk)])
 print("permutation-invariant bit-exact:", bool(jnp.all(out == out2)),
       "(float sums are NOT — this is the production win)")

@@ -16,7 +16,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--agg", default="fpisa",
-                    choices=["native", "fpisa", "switchml", "fpisa_seq"])
+                    choices=["native", "fpisa", "switchml", "fpisa_seq",
+                             "switch_emu"])
+    ap.add_argument("--agg-backend", default="auto",
+                    choices=["auto", "jnp", "pallas"],
+                    help="pre/post-collective transform backend (matches "
+                         "launch/train.py: fused Pallas kernels on TPU)")
+    ap.add_argument("--agg-chunk", type=int, default=0,
+                    help="stream the aggregation through chunks of this many "
+                         "elements (0 = whole-tensor)")
     ap.add_argument("--ckpt-dir", default="/tmp/fpisa_train_lm")
     args = ap.parse_args()
 
@@ -29,7 +37,9 @@ def main():
     )
     params, opt, hist = train_loop(
         cfg, steps=args.steps, global_batch=8, seq_len=256,
-        agg_strategy=args.agg, ckpt_dir=args.ckpt_dir, ckpt_every=50,
+        agg_strategy=args.agg, agg_backend=args.agg_backend,
+        agg_chunk=args.agg_chunk,
+        ckpt_dir=args.ckpt_dir, ckpt_every=50,
         log_every=10,
     )
     print(f"final loss {hist[-1]:.4f} (from {hist[0]:.4f}); "

@@ -22,6 +22,13 @@ fpisa      : the paper's technique adapted to TPU: block-exponent planes,
 fpisa_seq  : bit-faithful switch-arrival semantics (sequential FPISA-A over
              the worker axis via all_gather + scan). Used by accuracy
              experiments; not a production path (W x bytes on the wire).
+switch_emu : validation strategy — routes the gathered per-worker gradients
+             through the batched switch-dataplane emulator
+             (``repro/switchsim``) via a host callback: real slot pool,
+             worker bitmaps, streaming window and packetization, lossless
+             fabric. Bit-identical to ``fpisa_seq`` (zero-drop arrival order
+             is worker-major per chunk). Strictly for validating the
+             emulator against the production collectives — never a hot path.
 
 Options
 -------
@@ -60,6 +67,8 @@ from __future__ import annotations
 import dataclasses
 import math
 from typing import Sequence
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -339,11 +348,42 @@ def fpisa_seq_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig)
     return out.reshape(x.shape).astype(x.dtype)
 
 
+def switch_emu_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
+    """Validation strategy: all_gather the per-worker shards, then run the
+    real gradient through the batched switch-dataplane emulator on the host
+    (``jax.pure_callback``). Exercises the full protocol machinery — slot
+    claim/recycle, bitmaps, packetized streaming window — on a lossless
+    fabric, so the result is bit-identical to ``fpisa_seq`` (worker-major
+    arrival order per chunk). See repro/switchsim/dataplane.py."""
+    if cfg.fmt_name != "fp32":
+        raise ValueError(
+            "switch_emu runs on the jax-free numpy dataplane, which is "
+            f"fp32-only; got fmt_name={cfg.fmt_name!r}")
+    axes = tuple(axis_names)
+    w = _axis_size(axes)
+    stacked = lax.all_gather(x.astype(jnp.float32).reshape(-1), axes)
+    stacked = stacked.reshape(-1, x.size)
+
+    def host(vals):
+        from repro import switchsim
+
+        # NumpyDataplane, NOT the jitted one: concurrent host callbacks that
+        # re-enter jax deadlock the CPU client (see switchsim/npfpisa.py).
+        dp = switchsim.NumpyDataplane(switchsim.DataplaneConfig(
+            num_workers=w, fmt_name="fp32", variant="fpisa_a"))
+        return switchsim.run_aggregation(dp, np.asarray(vals)).astype(np.float32)
+
+    out = jax.pure_callback(
+        host, jax.ShapeDtypeStruct((x.size,), jnp.float32), stacked)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
 STRATEGIES = {
     "native": native_allreduce,
     "switchml": switchml_allreduce,
     "fpisa": fpisa_allreduce,
     "fpisa_seq": fpisa_seq_allreduce,
+    "switch_emu": switch_emu_allreduce,
 }
 
 

@@ -1,24 +1,23 @@
-"""Functional PISA switch emulator for FPISA aggregation.
+"""Legacy per-packet PISA switch emulator — now a thin compatibility shim.
 
-Models the switch-resident part of a SwitchML/FPISA deployment faithfully
-enough to test the *protocol* properties the paper relies on:
+The protocol semantics documented here (slot pool, worker bitmap
+idempotence, SwitchML double-pool window recycling, exactly-once aggregation
+under an unreliable fabric) are implemented once, vectorized and
+jit-compiled, in ``repro/switchsim/dataplane.py``. ``FpisaSwitch`` keeps the
+original one-packet-at-a-time API by driving a single-pipeline
+``BatchedDataplane`` with batch size 1; ``run_aggregation`` keeps the
+original *immediate-eligibility* driver loop (a worker's send can unblock a
+later worker within the same round) that the legacy tests pin.
 
-* a pool of aggregation **slots**, each holding ``elems_per_packet`` FPISA
-  accumulator registers (exponent plane + signed mantissa plane) plus a
-  per-slot worker **bitmap** (idempotence under retransmission) and a
-  completion counter;
-* streaming chunked aggregation: each worker sends chunk ``c`` to slot
-  ``c % num_slots``; the slot broadcasts the aggregate when all workers have
-  contributed, then is reused for chunk ``c + num_slots`` (SwitchML's
-  streaming window);
-* packet loss + timeout retransmission: duplicate packets are ignored via the
-  bitmap — the aggregation is **exactly-once** per (worker, chunk) even under
-  an unreliable fabric. This is the fault-tolerance mechanism of the paper's
-  deployment scenario, reproduced and tested.
+Use ``repro.switchsim`` directly for anything throughput-sensitive: its
+``run_aggregation`` submits every eligible packet of a round as one batch
+(~100x the packet rate of this shim — measured in
+``benchmarks/fig10_goodput.py``) and models multiple ingress pipelines.
 
-The emulator is a pure-Python/numpy state machine (control plane) driving
-jnp FPISA arithmetic (data plane); it is used by tests and accuracy
-benchmarks, not by the training hot path.
+Stats note: retransmissions that arrive after their slot was recycled for a
+newer chunk are counted under ``stats["stale"]``; ``stats["duplicates"]``
+now counts only true bitmap hits (same (worker, chunk) seen twice). The
+pre-refactor emulator conflated the two under ``duplicates``.
 """
 from __future__ import annotations
 
@@ -26,8 +25,7 @@ import dataclasses
 
 import numpy as np
 
-import jax.numpy as jnp
-
+from repro import switchsim
 from repro.core import fpisa
 
 
@@ -58,65 +56,36 @@ class ResultPacket:
 
 
 class FpisaSwitch:
-    """One emulated ingress pipeline worth of FPISA aggregation slots."""
+    """One emulated ingress pipeline worth of FPISA aggregation slots
+    (per-packet view over a 1-pipeline batched dataplane)."""
 
     def __init__(self, cfg: SwitchConfig):
         self.cfg = cfg
-        # SwitchML-style double pool: chunk c lives in slot c % (2*num_slots),
-        # so a completed slot can keep serving retransmissions for a full
-        # window after completion before being recycled.
-        n, e = 2 * cfg.num_slots, cfg.elems_per_packet
-        self.num_physical_slots = n
-        self._exp = np.zeros((n, e), np.int32)
-        self._man = np.zeros((n, e), np.int32)
-        self._bitmap = np.zeros((n,), np.int64)  # bit w set => worker w seen
-        self._slot_chunk = np.full((n,), -1, np.int64)  # chunk owning the slot
-        self._result = [None] * n  # cached broadcast payload once complete
-        self.stats = {"packets": 0, "duplicates": 0, "overwrite": 0, "overflow": 0}
+        self._dp = switchsim.BatchedDataplane(switchsim.DataplaneConfig(
+            num_workers=cfg.num_workers,
+            num_slots=cfg.num_slots,
+            elems_per_packet=cfg.elems_per_packet,
+            fmt_name=cfg.fmt_name,
+            variant=cfg.variant,
+            num_pipelines=1,
+            rounds_per_call=1,  # one packet per dispatch: rank is always 0
+        ))
+        self.num_physical_slots = self._dp.cfg.physical_slots_per_pipeline
 
-    def _add(self, slot: int, payload: np.ndarray) -> None:
-        inp = fpisa.encode(jnp.asarray(payload, jnp.float32), self.cfg.fmt)
-        acc = fpisa.Planes(jnp.asarray(self._exp[slot]), jnp.asarray(self._man[slot]))
-        add = fpisa.fpisa_a_add if self.cfg.variant == "fpisa_a" else fpisa.fpisa_add_full
-        new, st = add(acc, inp, self.cfg.fmt)
-        self._exp[slot] = np.asarray(new.exp)
-        self._man[slot] = np.asarray(new.man)
-        self.stats["overwrite"] += int(np.sum(np.asarray(st.overwrite)))
-        self.stats["overflow"] += int(np.sum(np.asarray(st.overflow)))
+    @property
+    def stats(self) -> dict:
+        s = self._dp.stats
+        return {k: s[k] for k in ("packets", "duplicates", "stale",
+                                  "overwrite", "overflow")}
 
     def ingest(self, pkt: Packet) -> ResultPacket | None:
         """Process one packet; returns the broadcast result when a slot fills,
         or re-serves the cached result for duplicate packets of a completed
         chunk (idempotent exactly-once aggregation under retransmission)."""
-        cfg = self.cfg
-        slot = pkt.chunk % self.num_physical_slots
-        if self._slot_chunk[slot] != pkt.chunk:
-            if self._slot_chunk[slot] > pkt.chunk:
-                # retransmission for a chunk whose slot was already recycled —
-                # cannot happen under the window discipline (tested); drop.
-                self.stats["duplicates"] += 1
-                return None
-            # first packet of a new chunk claims the (recycled) slot
-            self._slot_chunk[slot] = pkt.chunk
-            self._bitmap[slot] = 0
-            self._exp[slot] = 0
-            self._man[slot] = 0
-            self._result[slot] = None
-        bit = np.int64(1) << np.int64(pkt.worker)
-        full = (np.int64(1) << np.int64(cfg.num_workers)) - 1
-        if self._bitmap[slot] & bit:
-            self.stats["duplicates"] += 1  # idempotent: do NOT re-add
-            if self._result[slot] is not None:
-                return ResultPacket(chunk=pkt.chunk, payload=self._result[slot])
-            return None
-        self._bitmap[slot] |= bit
-        self.stats["packets"] += 1
-        self._add(slot, pkt.payload)
-        if self._bitmap[slot] == full:
-            planes = fpisa.Planes(jnp.asarray(self._exp[slot]), jnp.asarray(self._man[slot]))
-            out = np.asarray(fpisa.renormalize(planes, cfg.fmt))
-            self._result[slot] = out
-            return ResultPacket(chunk=pkt.chunk, payload=out)
+        ready, results, _ = self._dp.ingest_batch(
+            [pkt.worker], [pkt.chunk], pkt.payload[None, :])
+        if ready[0]:
+            return ResultPacket(chunk=pkt.chunk, payload=results[0])
         return None
 
 
@@ -136,6 +105,11 @@ def run_aggregation(
     has received the result of chunk ``c - num_slots`` (SwitchML's
     self-clocked streaming window — this is what makes slot recycling safe).
     Returns the aggregated (N,) vector.
+
+    This is the legacy immediate-eligibility schedule (eligibility re-checked
+    per packet, so completions unblock later sends within the same round).
+    ``repro.switchsim.run_aggregation`` is the batched round-synchronous
+    driver; it accepts this class too, for per-packet/batched parity runs.
     """
     cfg = switch.cfg
     w, n = worker_vectors.shape

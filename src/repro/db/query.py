@@ -12,9 +12,11 @@ with FP32 data, which the original systems cannot handle:
   hardware extension rather than the FPISA-A approximation, Sec. 6.1).
 
 The "workers -> switch -> master" dataflow is emulated faithfully: workers
-stream row packets, the switch emulator applies the operator, the master does
-final exact processing on survivors. Benchmarks report rows-pruned and
-speedup vs a "Spark-like" full-scan baseline (fig13).
+stream row *batches*, the switch side runs as the jitted batched kernels in
+``repro/switchsim/query.py`` (one dispatch per batch — the per-row Python
+loops are gone), the master does final exact processing on survivors.
+Benchmarks report rows-pruned and speedup vs a "Spark-like" full-scan
+baseline (fig13).
 """
 from __future__ import annotations
 
@@ -25,6 +27,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import fpisa
+from repro.switchsim import query as swq
+from repro.switchsim.dataplane import _pow2ceil
 
 
 def _cmp_planes(a: fpisa.Planes, b: fpisa.Planes) -> np.ndarray:
@@ -47,7 +51,8 @@ class SwitchStats:
 class TopNPruner:
     """In-switch Top-N on an FP32 column. The switch keeps the N-th best value
     seen so far in FPISA registers; rows below it are dropped (Cheetah's
-    pruning abstraction). The master exactly sorts the survivors."""
+    pruning abstraction) — one ``switchsim.query.topn_keep`` dispatch per row
+    batch. The master exactly sorts the survivors."""
 
     def __init__(self, n: int):
         self.n = n
@@ -55,8 +60,9 @@ class TopNPruner:
 
     def run(self, values: np.ndarray, batch: int = 256) -> np.ndarray:
         """values: worker-streamed FP32 column. Returns indices of survivors."""
+        values = np.asarray(values, np.float32)
         thresh = None  # FPISA planes of the current N-th best
-        heap: list = []  # switch-side shadow of the N best (bounded memory)
+        heap = np.empty(0, np.float32)  # switch-side shadow of the N best
         survivors = []
         for lo in range(0, len(values), batch):
             chunk = values[lo : lo + batch]
@@ -64,74 +70,74 @@ class TopNPruner:
             if thresh is None:
                 keep = np.ones(len(chunk), bool)
             else:
-                planes = fpisa.encode(jnp.asarray(chunk, jnp.float32))
-                tplanes = fpisa.Planes(
-                    exp=jnp.broadcast_to(thresh.exp, planes.exp.shape),
-                    man=jnp.broadcast_to(thresh.man, planes.man.shape),
-                )
-                keep = _cmp_planes(planes, tplanes)
+                keep = np.asarray(swq.topn_keep(
+                    jnp.asarray(chunk), thresh[0], thresh[1]))
             idx = np.nonzero(keep)[0] + lo
             survivors.extend(idx.tolist())
             self.stats.rows_out += int(keep.sum())
-            heap.extend(values[idx].tolist())
-            heap = sorted(heap, reverse=True)[: self.n]
-            if len(heap) == self.n:
-                t = fpisa.encode(jnp.float32(heap[-1]))
-                thresh = fpisa.Planes(exp=t.exp, man=t.man)
+            heap = np.concatenate([heap, values[idx]])
+            if len(heap) >= self.n:
+                heap = np.partition(heap, -self.n)[-self.n :]
+                t = fpisa.encode(jnp.float32(heap.min()))
+                thresh = (t.exp, t.man)
         return np.asarray(survivors, np.int64)
 
 
 class GroupBySum:
     """In-switch hash aggregation: value column summed per group key in FPISA
     accumulator slots (full-FPISA add). Only per-group aggregates leave the
-    switch — the row stream itself is consumed in-network."""
+    switch — the row stream itself is consumed in-network.
+
+    Rows are streamed through ``switchsim.query.groupby_ingest``: batches are
+    sorted by key (stable, preserving packet order within a key) and applied
+    with per-slot sequential semantics in a handful of vectorized rounds."""
+
+    # The paper's headroom analysis (Sec. 3.3): 7 headroom bits cover ~128
+    # same-scale adds before the int32 register can overflow. Long-running
+    # group-by slots therefore FLUSH periodically: renormalize + re-encode the
+    # register (in deployment: emit a partial aggregate to the master and
+    # reset the slot). 64 keeps a 2x safety margin. The flush counter lives in
+    # the slot and persists across batches.
+    FLUSH_EVERY = 64
 
     def __init__(self, num_slots: int, variant: str = "full"):
         self.num_slots = num_slots
         self.variant = variant
         self.exp = np.zeros(num_slots, np.int32)
         self.man = np.zeros(num_slots, np.int32)
+        self.since = np.zeros(num_slots, np.int32)
         self.stats = SwitchStats()
 
-    # The paper's headroom analysis (Sec. 3.3): 7 headroom bits cover ~128
-    # same-scale adds before the int32 register can overflow. Long-running
-    # group-by slots therefore FLUSH periodically: renormalize + re-encode the
-    # register (in deployment: emit a partial aggregate to the master and
-    # reset the slot). 64 keeps a 2x safety margin.
-    FLUSH_EVERY = 64
-
-    def run(self, keys: np.ndarray, values: np.ndarray) -> dict:
+    def run(self, keys: np.ndarray, values: np.ndarray, batch: int = 65536) -> dict:
+        keys = np.asarray(keys)
         assert keys.max() < self.num_slots, "hash table sized for distinct keys"
+        values = np.asarray(values, np.float32)
         self.stats.rows_in += len(keys)
-        add = fpisa.fpisa_add_full if self.variant == "full" else fpisa.fpisa_a_add
-        # stream rows through the pipeline in packet order
-        order = np.argsort(keys, kind="stable")
-        for lo in range(0, len(order), 4096):
-            sel = order[lo : lo + 4096]
-            planes = fpisa.encode(jnp.asarray(values[sel], jnp.float32))
-            k = keys[sel]
-            exp_j = jnp.asarray(self.exp)
-            man_j = jnp.asarray(self.man)
-            # sequential semantics per slot preserved because rows are sorted
-            # by key within the batch and slots are disjoint across segments
-            uk, starts = np.unique(k, return_index=True)
-            for i, key in enumerate(uk):
-                seg = slice(starts[i], starts[i + 1] if i + 1 < len(uk) else len(sel))
-                acc = fpisa.Planes(exp_j[key][None], man_j[key][None])
-                vals = fpisa.Planes(planes.exp[seg], planes.man[seg])
-                since_flush = 0
-                for j in range(vals.exp.shape[0]):
-                    acc, _ = add(acc, fpisa.Planes(vals.exp[j][None], vals.man[j][None]))
-                    since_flush += 1
-                    if since_flush >= self.FLUSH_EVERY:
-                        acc = fpisa.encode(fpisa.renormalize(acc))
-                        since_flush = 0
-                self.exp[key] = int(acc.exp[0])
-                self.man[key] = int(acc.man[0])
+        # stream rows through the pipeline in batches, sorted by key within
+        # the batch (stable: per-key packet order is the stream order)
+        exp, man, since = (jnp.asarray(self.exp), jnp.asarray(self.man),
+                           jnp.asarray(self.since))
+        for lo in range(0, len(keys), batch):
+            order = np.argsort(keys[lo : lo + batch], kind="stable")
+            k = keys[lo : lo + batch][order].astype(np.int32)
+            v = values[lo : lo + batch][order]
+            # rounds >= the max per-key multiplicity: everything lands in one
+            # dispatch; pad to a power of two to bound jit re-specialization
+            rounds = _pow2ceil(int(np.bincount(k).max()))
+            bp = _pow2ceil(len(k))
+            vmask = np.arange(bp) < len(k)
+            exp, man, since, deferred = swq.groupby_ingest(
+                exp, man, since,
+                jnp.asarray(np.pad(k, (0, bp - len(k)))),
+                jnp.asarray(np.pad(v, (0, bp - len(k)))),
+                jnp.asarray(vmask),
+                num_slots=self.num_slots, rounds=rounds, variant=self.variant,
+                flush_every=self.FLUSH_EVERY)
+            assert not bool(np.asarray(deferred).any())
+        self.exp, self.man, self.since = (np.asarray(exp), np.asarray(man),
+                                          np.asarray(since))
         self.stats.rows_out += len(np.unique(keys))
-        out = fpisa.renormalize(
-            fpisa.Planes(jnp.asarray(self.exp), jnp.asarray(self.man))
-        )
+        out = fpisa.renormalize(fpisa.Planes(jnp.asarray(self.exp), jnp.asarray(self.man)))
         return {int(k): float(out[k]) for k in np.unique(keys)}
 
 

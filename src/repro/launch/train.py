@@ -28,6 +28,7 @@ from repro.train.step import make_train_step
 
 def train_loop(cfg, *, steps: int, global_batch: int, seq_len: int,
                agg_strategy: str = "fpisa", agg_backend: str = "auto",
+               agg_chunk: int = 0,
                ckpt_dir: str | None = None,
                ckpt_every: int = 50, mesh=None, log_every: int = 10,
                opt_overrides: dict | None = None, seed: int = 0):
@@ -65,7 +66,8 @@ def train_loop(cfg, *, steps: int, global_batch: int, seq_len: int,
             start_step = latest + 1
             print(f"[train] resumed from step {latest}")
 
-    agg = AggConfig(strategy=agg_strategy, backend=agg_backend)
+    agg = AggConfig(strategy=agg_strategy, backend=agg_backend,
+                    chunk_elems=agg_chunk)
     step_fn = jax.jit(make_train_step(model, mesh, agg, opt_cfg, global_batch))
     loader = ShardedLoader(SyntheticCorpus(cfg.vocab_size, seed), global_batch, seq_len)
     bspec = rules.batch_pspec(mesh, global_batch)
@@ -103,11 +105,15 @@ def main():
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--agg", default="fpisa",
-                    choices=["native", "fpisa", "switchml", "fpisa_seq"])
+                    choices=["native", "fpisa", "switchml", "fpisa_seq",
+                             "switch_emu"])
     ap.add_argument("--agg-backend", default="auto",
                     choices=["auto", "jnp", "pallas"],
                     help="pre/post-collective transform backend (fused Pallas "
                          "kernels on TPU; pure jnp elsewhere)")
+    ap.add_argument("--agg-chunk", type=int, default=0,
+                    help="stream the aggregation through chunks of this many "
+                         "elements (bounds transient plane memory; 0 = off)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     args = ap.parse_args()
@@ -115,7 +121,7 @@ def main():
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     train_loop(cfg, steps=args.steps, global_batch=args.global_batch,
                seq_len=args.seq_len, agg_strategy=args.agg,
-               agg_backend=args.agg_backend,
+               agg_backend=args.agg_backend, agg_chunk=args.agg_chunk,
                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
 
 

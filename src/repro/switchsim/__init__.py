@@ -1,0 +1,31 @@
+"""Batched, jit-compiled multi-pipeline PISA switch dataplane.
+
+The per-packet emulator in ``core/switch.py`` is the *protocol reference*:
+a Python state machine dispatching tiny jnp ops one packet at a time. This
+subsystem is the *throughput engine*: the same FPISA slot semantics
+(claim/recycle, bitmap idempotence, completion detection, delayed
+renormalization) expressed as stacked array state and a single jitted
+``ingest_batch`` that processes thousands of packets per dispatch, across
+``num_pipelines`` independent ingress pipelines (the paper's Tofino pipeline
+model, Sec. 4/6.1).
+
+Modules
+-------
+``dataplane``  — ``DataplaneConfig`` / ``BatchedDataplane`` /
+                 ``run_aggregation`` (the batch-per-round all-reduce driver,
+                 which also drives the legacy per-packet switch for parity).
+``query``      — batched in-switch query operators (Top-N compare kernel,
+                 group-by scatter-accumulate kernel) used by ``db/query.py``.
+
+``core/switch.py`` remains the compatibility shim: its ``FpisaSwitch`` is now
+a one-packet-at-a-time view over a single-pipeline ``BatchedDataplane``.
+"""
+from repro.switchsim.dataplane import (  # noqa: F401
+    BatchedDataplane,
+    DataplaneConfig,
+    DataplaneState,
+    NumpyDataplane,
+    ingest_batch,
+    init_state,
+    run_aggregation,
+)

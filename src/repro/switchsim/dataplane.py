@@ -1,0 +1,515 @@
+"""Vectorized multi-pipeline FPISA switch dataplane.
+
+State model
+-----------
+A dataplane is ``num_pipelines`` independent ingress pipelines, each with
+``2 * num_slots`` physical aggregation slots (SwitchML's double pool: a
+completed slot keeps re-serving its cached result for a full window before
+being recycled). All per-slot state is stacked into arrays over the global
+slot axis ``G = num_pipelines * 2 * num_slots``:
+
+* ``exp`` / ``man``  — (G, E) int32 FPISA accumulator planes,
+* ``seen``           — (G, W) bool worker bitmap (idempotence),
+* ``slot_chunk``     — (G,) owning chunk id (-1 = never claimed),
+* ``result`` / ``result_valid`` — cached broadcast payload per completed slot.
+
+Chunk ``c`` is striped across pipelines (``pipeline = c % P``) and lands in
+physical slot ``(c // P) % (2 * num_slots)`` of that pipeline — with ``P = 1``
+this is exactly the legacy ``core/switch.py`` mapping, which is what the
+parity tests pin.
+
+Batched ingest
+--------------
+``ingest_batch`` applies a batch of B packets with *per-slot sequential
+semantics*: packets hitting the same slot are applied in batch order (FPISA
+addition is order-dependent), while different slots proceed fully in
+parallel. The trick is a rank/round decomposition computed inside the jit:
+
+1. stable-sort packets by global slot id; the within-slot *rank* of each
+   packet falls out of the sorted segment offsets;
+2. scatter packet indices into a (G, rounds) table — round ``r`` holds at
+   most one packet per slot;
+3. ``lax.scan`` over rounds: each round is one fully vectorized pass of the
+   slot state machine (stale drop / claim+reset / bitmap-gated FPISA add /
+   completion + delayed renormalization / cached-result re-serve) over all
+   G slots at once.
+
+Packets whose rank exceeds ``rounds`` are reported as *deferred* (untouched);
+the ``BatchedDataplane`` wrapper resubmits them in order, so any occupancy is
+handled while the common case stays a single dispatch.
+
+Pipeline/throughput model
+-------------------------
+Per-pipeline recirculation counters model the paper's Tofino limitation: the
+``full`` (RSAW shift-any-operand) add variant costs one recirculation per
+accepted packet — halving per-pipeline packet rate — while ``fpisa_a``
+completes in a single pass (Sec. 4.3, 6.1). ``benchmarks/fig10_goodput.py``
+turns these counters plus wall-clock packets/sec into the goodput figure.
+
+Stats: ``packets`` (accepted adds), ``duplicates`` (bitmap hits),
+``stale`` (retransmissions for an already-recycled slot — counted separately
+from duplicates, unlike the pre-refactor emulator which conflated them),
+``overwrite`` / ``overflow`` (element counts from the FPISA adds), and
+``recirculations`` per pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import fpisa
+
+_PACKED_DTYPE = {"fp32": jnp.float32, "fp16": jnp.float16, "bf16": jnp.bfloat16}
+
+COUNTERS = ("packets", "duplicates", "stale", "overwrite", "overflow")
+
+
+@dataclasses.dataclass(frozen=True)
+class DataplaneConfig:
+    """Static shape/semantics of a batched dataplane (hashable: jit-static)."""
+
+    num_workers: int
+    num_slots: int = 8  # logical slots per pipeline (physical = 2x: double pool)
+    elems_per_packet: int = 256
+    fmt_name: str = "fp32"
+    variant: str = "fpisa_a"  # fpisa_a | full
+    num_pipelines: int = 1
+    # max per-slot packets applied per ingest dispatch; 0 -> 2 * num_workers
+    # (the worst case one driver round can produce under the window
+    # discipline: W retransmissions of the completed chunk + W first packets
+    # of the chunk recycling the slot). Overflow packets are deferred.
+    rounds_per_call: int = 0
+
+    @property
+    def fmt(self):
+        return fpisa.FORMATS[self.fmt_name]
+
+    @property
+    def physical_slots_per_pipeline(self) -> int:
+        return 2 * self.num_slots
+
+    @property
+    def total_slots(self) -> int:
+        return self.num_pipelines * self.physical_slots_per_pipeline
+
+    @property
+    def window(self) -> int:
+        """Streaming-window depth in chunks (self-clocking: a worker may send
+        chunk c only once it holds the result of c - window)."""
+        return self.num_slots * self.num_pipelines
+
+    @property
+    def rounds(self) -> int:
+        return self.rounds_per_call or 2 * self.num_workers
+
+
+class DataplaneState(NamedTuple):
+    exp: jax.Array  # (G, E) int32 accumulator exponent plane
+    man: jax.Array  # (G, E) int32 accumulator mantissa plane
+    seen: jax.Array  # (G, W) bool worker bitmap
+    slot_chunk: jax.Array  # (G,) int32 chunk owning the slot; -1 = unclaimed
+    result: jax.Array  # (G, E) packed-FP cached broadcast payload
+    result_valid: jax.Array  # (G,) bool
+    counters: jax.Array  # (len(COUNTERS),) int32
+    recirc: jax.Array  # (P,) int32 per-pipeline recirculation counter
+
+
+def init_state(cfg: DataplaneConfig) -> DataplaneState:
+    g, e = cfg.total_slots, cfg.elems_per_packet
+    return DataplaneState(
+        exp=jnp.zeros((g, e), jnp.int32),
+        man=jnp.zeros((g, e), jnp.int32),
+        seen=jnp.zeros((g, cfg.num_workers), bool),
+        slot_chunk=jnp.full((g,), -1, jnp.int32),
+        result=jnp.zeros((g, e), _PACKED_DTYPE[cfg.fmt_name]),
+        result_valid=jnp.zeros((g,), bool),
+        counters=jnp.zeros((len(COUNTERS),), jnp.int32),
+        recirc=jnp.zeros((cfg.num_pipelines,), jnp.int32),
+    )
+
+
+def slot_of(cfg: DataplaneConfig, chunks):
+    """Global slot id for each chunk id (pipeline striping + double pool)."""
+    pipe = chunks % cfg.num_pipelines
+    slot = (chunks // cfg.num_pipelines) % cfg.physical_slots_per_pipeline
+    return pipe * cfg.physical_slots_per_pipeline + slot
+
+
+def _rank_table(key, valid, num_keys: int, rounds: int):
+    """Scatter packet indices into a (num_keys, rounds) table such that column
+    r holds (at most) the r-th packet, in batch order, of every key.
+
+    Returns (table int32 with -1 for empty cells, deferred bool mask over the
+    batch marking packets whose within-key rank >= rounds)."""
+    b = key.shape[0]
+    key = jnp.where(valid, key, num_keys)  # invalid -> sentinel, dropped below
+    order = jnp.argsort(key)  # stable: preserves batch order within a key
+    ks = key[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    seg_start = jnp.where(first, jnp.arange(b), 0)
+    seg_start = lax.associative_scan(jnp.maximum, seg_start)
+    rank = jnp.arange(b) - seg_start
+
+    fits = (ks < num_keys) & (rank < rounds)
+    table = jnp.full((num_keys, rounds), -1, jnp.int32)
+    table = table.at[
+        jnp.where(fits, ks, num_keys), jnp.where(fits, rank, 0)
+    ].set(order.astype(jnp.int32), mode="drop")
+    deferred = jnp.zeros((b,), bool).at[order].set((ks < num_keys) & (rank >= rounds))
+    return table, deferred
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "rounds"))
+def ingest_batch(state: DataplaneState, workers, chunks, payloads, valid, *,
+                 cfg: DataplaneConfig, rounds: int | None = None):
+    """Apply a batch of packets to the dataplane (see module doc).
+
+    Args:
+      state:    DataplaneState.
+      workers:  (B,) int32 worker ids in [0, num_workers).
+      chunks:   (B,) int32 chunk ids.
+      payloads: (B, E) float payloads.
+      valid:    (B,) bool lane mask (padding lanes are ignored).
+
+    Returns ``(state, ready, results, accepted, deferred)`` where ``ready``
+    marks packets answered with a broadcast payload (slot completion or
+    idempotent re-serve of a completed chunk), ``results`` holds those
+    payloads, ``accepted`` marks packets whose contribution was added (first
+    arrival of a (worker, chunk)), and ``deferred`` marks packets not
+    processed this call (per-slot rank overflow; resubmit in order).
+    """
+    g, w_n, b = cfg.total_slots, cfg.num_workers, workers.shape[0]
+    rounds = rounds or cfg.rounds
+    fmt = cfg.fmt
+    add = fpisa.fpisa_a_add if cfg.variant == "fpisa_a" else fpisa.fpisa_add_full
+    planes = fpisa.encode(payloads, fmt)
+
+    table, deferred = _rank_table(slot_of(cfg, chunks), valid, g, rounds)
+    lane_pipe = jnp.arange(g) // cfg.physical_slots_per_pipeline
+
+    ready0 = jnp.zeros((b,), bool)
+    results0 = jnp.zeros((b, cfg.elems_per_packet), _PACKED_DTYPE[cfg.fmt_name])
+    accepted0 = jnp.zeros((b,), bool)
+
+    def round_body(carry, pidx):
+        st, ready, results, accepted = carry
+        active = pidx >= 0
+        pi = jnp.where(active, pidx, 0)
+        wk, ck = workers[pi], chunks[pi]
+        inp = fpisa.Planes(planes.exp[pi], planes.man[pi])
+
+        cur = st.slot_chunk
+        is_stale = active & (cur > ck)
+        is_new = active & (cur < ck)
+        proceed = active & ~is_stale
+
+        # claim: first packet of a newer chunk resets the (recycled) slot
+        seen = jnp.where(is_new[:, None], False, st.seen)
+        exp = jnp.where(is_new[:, None], 0, st.exp)
+        man = jnp.where(is_new[:, None], 0, st.man)
+        rvalid = jnp.where(is_new, False, st.result_valid)
+        slot_chunk = jnp.where(is_new, ck, cur)
+
+        already = seen[jnp.arange(g), jnp.where(proceed, wk, 0)]
+        is_dup = proceed & already
+        do_add = proceed & ~already
+
+        newp, addst = add(fpisa.Planes(exp, man), inp, fmt)
+        exp = jnp.where(do_add[:, None], newp.exp, exp)
+        man = jnp.where(do_add[:, None], newp.man, man)
+        seen = seen | (do_add[:, None] & (jnp.arange(w_n)[None, :] == wk[:, None]))
+        complete = do_add & jnp.all(seen, axis=1)
+
+        # delayed renormalization only on rounds that complete a slot
+        result, rvalid = lax.cond(
+            jnp.any(complete),
+            lambda r, rv: (
+                jnp.where(complete[:, None],
+                          fpisa.renormalize(fpisa.Planes(exp, man), fmt), r),
+                rv | complete,
+            ),
+            lambda r, rv: (r, rv),
+            st.result, rvalid,
+        )
+
+        serve = complete | (is_dup & rvalid)
+        # most rounds serve nothing (completion needs rank == W-1): skip the
+        # (G -> B, E) result scatter unless some lane actually answers
+        ready, results = lax.cond(
+            jnp.any(serve),
+            lambda rd, rs: (
+                # b = out-of-bounds sentinel: non-serving lanes are dropped
+                rd.at[jnp.where(serve, pi, b)].set(True, mode="drop"),
+                rs.at[jnp.where(serve, pi, b)].set(result, mode="drop"),
+            ),
+            lambda rd, rs: (rd, rs),
+            ready, results,
+        )
+        accepted = accepted.at[jnp.where(do_add, pi, b)].set(True, mode="drop")
+
+        counters = st.counters + jnp.stack([
+            jnp.sum(do_add), jnp.sum(is_dup), jnp.sum(is_stale),
+            jnp.sum(jnp.where(do_add[:, None], addst.overwrite, False)),
+            jnp.sum(jnp.where(do_add[:, None], addst.overflow, False)),
+        ]).astype(jnp.int32)
+        # RSAW full-add costs one recirculation pass per accepted packet
+        recirc = st.recirc
+        if cfg.variant == "full":
+            recirc = recirc + jax.ops.segment_sum(
+                do_add.astype(jnp.int32), lane_pipe, num_segments=cfg.num_pipelines)
+
+        st = DataplaneState(exp, man, seen, slot_chunk, result, rvalid,
+                            counters, recirc)
+        return (st, ready, results, accepted), None
+
+    (state, ready, results, accepted), _ = lax.scan(
+        round_body, (state, ready0, results0, accepted0), table.T)
+    return state, ready, results, accepted, deferred
+
+
+def _pow2ceil(n: int, floor: int = 1) -> int:
+    p = floor
+    while p < n:
+        p *= 2
+    return p
+
+
+class BatchedDataplane:
+    """Host-side handle: owns the device state, pads/submits numpy batches,
+    resubmits deferred packets, and exposes legacy-style ``stats``.
+
+    Jit specialization discipline: batches are padded to one of (at most) two
+    fixed sizes and the per-slot round count is the power-of-two cover of the
+    batch's actual max slot occupancy, capped at ``cfg.rounds`` — so the
+    compile cache stays small and steady-state driving never recompiles."""
+
+    def __init__(self, cfg: DataplaneConfig, max_batch: int | None = None):
+        self.cfg = cfg
+        self.state = init_state(cfg)
+        # largest batch one driver round can produce under the window
+        # discipline (every worker's full in-flight window)
+        self.max_batch = max_batch or min(
+            _pow2ceil(cfg.num_workers * cfg.window), 8192)
+        self._sizes = sorted({min(256, self.max_batch), self.max_batch})
+
+    def _pad_size(self, n: int) -> int:
+        for s in self._sizes:
+            if n <= s:
+                return s
+        return self.max_batch
+
+    def ingest_batch(self, workers, chunks, payloads):
+        """Process packets (numpy in/out). Returns (ready, results, accepted)
+        aligned with the input batch; within-slot application order is the
+        batch order, matching a sequential per-packet switch."""
+        workers = np.asarray(workers, np.int32)
+        chunks = np.asarray(chunks, np.int32)
+        payloads = np.asarray(payloads, np.float32).reshape(
+            len(workers), self.cfg.elems_per_packet)
+        b = len(workers)
+        ready = np.zeros(b, bool)
+        results = np.zeros((b, self.cfg.elems_per_packet), np.float32)
+        accepted = np.zeros(b, bool)
+        gids = np.asarray(slot_of(self.cfg, chunks.astype(np.int64)))
+        queue = np.arange(b)
+        while queue.size:
+            cur, queue = queue[: self.max_batch], queue[self.max_batch :]
+            bp = self._pad_size(cur.size)
+            occ = int(np.bincount(gids[cur]).max())
+            rounds = min(_pow2ceil(occ), self.cfg.rounds)
+            pad = bp - cur.size
+            wk = np.pad(workers[cur], (0, pad))
+            ck = np.pad(chunks[cur], (0, pad))
+            pl = np.pad(payloads[cur], ((0, pad), (0, 0)))
+            vmask = np.arange(bp) < cur.size
+            self.state, rdy, res, acc, dfr = ingest_batch(
+                self.state, jnp.asarray(wk), jnp.asarray(ck), jnp.asarray(pl),
+                jnp.asarray(vmask), cfg=self.cfg, rounds=rounds)
+            rdy = np.asarray(rdy)[: cur.size]
+            res = np.asarray(res, np.float32)[: cur.size]
+            acc = np.asarray(acc)[: cur.size]
+            dfr = np.asarray(dfr)[: cur.size]
+            ready[cur[rdy]] = True
+            results[cur[rdy]] = res[rdy]
+            accepted[cur[acc]] = True
+            # deferred packets (rank overflow) go back FIRST: they precede
+            # everything not yet submitted in the original batch order
+            if dfr.any():
+                queue = np.concatenate([cur[dfr], queue])
+        return ready, results, accepted
+
+    @property
+    def stats(self) -> dict:
+        c = np.asarray(self.state.counters)
+        out = {name: int(c[i]) for i, name in enumerate(COUNTERS)}
+        out["recirculations"] = np.asarray(self.state.recirc).tolist()
+        return out
+
+
+class NumpyDataplane:
+    """Jax-free dataplane with the exact same slot semantics and
+    ``ingest_batch`` interface as ``BatchedDataplane`` (per-packet numpy loop
+    over ``npfpisa`` primitives — bit-identical, tests pin it).
+
+    Exists for contexts that must not re-enter jax — above all the
+    ``switch_emu`` all-reduce strategy, whose host callback would deadlock
+    the CPU PJRT client if it dispatched jitted computations (see
+    npfpisa module doc). Also a handy pdb-able reference."""
+
+    def __init__(self, cfg: DataplaneConfig):
+        from repro.switchsim import npfpisa
+
+        assert cfg.fmt_name == "fp32", "numpy dataplane is fp32-only"
+        self.cfg = cfg
+        self._np = npfpisa
+        g, e = cfg.total_slots, cfg.elems_per_packet
+        self._exp = np.zeros((g, e), np.int32)
+        self._man = np.zeros((g, e), np.int32)
+        self._seen = np.zeros((g, cfg.num_workers), bool)
+        self._slot_chunk = np.full((g,), -1, np.int64)
+        self._result = np.zeros((g, e), np.float32)
+        self._result_valid = np.zeros((g,), bool)
+        self.stats = {name: 0 for name in COUNTERS}
+        self.stats["recirculations"] = [0] * cfg.num_pipelines
+
+    def ingest_batch(self, workers, chunks, payloads):
+        cfg, F = self.cfg, self._np
+        workers = np.asarray(workers, np.int64)
+        chunks = np.asarray(chunks, np.int64)
+        payloads = np.asarray(payloads, np.float32).reshape(
+            len(workers), cfg.elems_per_packet)
+        add = F.fpisa_a_add if cfg.variant == "fpisa_a" else F.fpisa_add_full
+        gids = np.asarray(slot_of(cfg, chunks))
+        in_exp, in_man = F.encode(payloads)
+        b = len(workers)
+        ready = np.zeros(b, bool)
+        results = np.zeros((b, cfg.elems_per_packet), np.float32)
+        accepted = np.zeros(b, bool)
+        for i in range(b):
+            g, w, c = int(gids[i]), int(workers[i]), int(chunks[i])
+            if self._slot_chunk[g] > c:
+                self.stats["stale"] += 1
+                continue
+            if self._slot_chunk[g] < c:  # claim the (recycled) slot
+                self._slot_chunk[g] = c
+                self._seen[g] = False
+                self._exp[g] = 0
+                self._man[g] = 0
+                self._result_valid[g] = False
+            if self._seen[g, w]:
+                self.stats["duplicates"] += 1  # idempotent: do NOT re-add
+                if self._result_valid[g]:
+                    ready[i] = True
+                    results[i] = self._result[g]
+                continue
+            self._seen[g, w] = True
+            self.stats["packets"] += 1
+            e2, m2, over, ovf = add(self._exp[g], self._man[g], in_exp[i], in_man[i])
+            self._exp[g], self._man[g] = e2, m2
+            self.stats["overwrite"] += int(over.sum())
+            self.stats["overflow"] += int(ovf.sum())
+            accepted[i] = True
+            if cfg.variant == "full":
+                self.stats["recirculations"][g // cfg.physical_slots_per_pipeline] += 1
+            if self._seen[g].all():
+                self._result[g] = F.renormalize(self._exp[g], self._man[g])
+                self._result_valid[g] = True
+                ready[i] = True
+                results[i] = self._result[g]
+        return ready, results, accepted
+
+
+def run_aggregation(
+    switch,
+    worker_vectors: np.ndarray,
+    drop_prob: float = 0.0,
+    seed: int = 0,
+    max_rounds: int = 10_000,
+    record_arrivals: bool = False,
+):
+    """Batch-per-round all-reduce driver over an unreliable fabric.
+
+    ``switch`` is a ``BatchedDataplane`` (one jitted dispatch per round: every
+    eligible (worker, chunk) packet that survives the i.i.d. request drop) or
+    any object with a legacy per-packet ``.ingest`` (``core.switch.FpisaSwitch``
+    — same round-synchronous schedule, one packet at a time). Both paths
+    consume the seeded RNG identically (request drops drawn as one vector per
+    round, per-worker result-delivery drops drawn per completion in packet
+    order), so for identical seeds the two are **bit-identical** end to end —
+    the parity the fig10 benchmark and tests/test_switchsim.py pin.
+
+    Eligibility is snapshotted at round start: worker w may send chunk c iff
+    it lacks c's result and holds the result of c - window (SwitchML's
+    self-clocked streaming window, which makes slot recycling safe).
+
+    Returns the aggregated (N,) vector; with ``record_arrivals`` (batched
+    path only) also a {chunk: [workers in acceptance order]} dict for
+    replaying the exact switch-arrival order through the jnp reference.
+    """
+    cfg = switch.cfg
+    w, n = worker_vectors.shape
+    assert w == cfg.num_workers
+    e = cfg.elems_per_packet
+    window = cfg.num_slots * getattr(cfg, "num_pipelines", 1)
+    pad = (-n) % e
+    vecs = np.pad(worker_vectors, ((0, 0), (0, pad))).astype(np.float32)
+    nchunks = vecs.shape[1] // e
+    vecs3 = vecs.reshape(w, nchunks, e)
+    rng = np.random.default_rng(seed)
+    batched = hasattr(switch, "ingest_batch")
+
+    out = np.zeros((nchunks, e), np.float32)
+    have_result = np.zeros((w, nchunks), bool)
+    arrivals: dict[int, list[int]] = {}
+
+    for _ in range(max_rounds):
+        if have_result.all():
+            break
+        elig = ~have_result
+        if nchunks > window:
+            elig[:, window:] &= have_result[:, :-window]
+        ws, cs = np.nonzero(elig)  # row-major: worker-major packet order
+        keep = rng.random(ws.size) >= drop_prob
+        ws, cs = ws[keep], cs[keep]
+        if ws.size == 0:
+            continue
+        payloads = vecs3[ws, cs]
+        if batched:
+            ready, results, accepted = switch.ingest_batch(ws, cs, payloads)
+            if record_arrivals:
+                for i in np.nonzero(accepted)[0]:
+                    arrivals.setdefault(int(cs[i]), []).append(int(ws[i]))
+        else:
+            from repro.core import switch as legacy
+
+            ready = np.zeros(ws.size, bool)
+            results = np.zeros((ws.size, e), np.float32)
+            for i in range(ws.size):
+                res = switch.ingest(
+                    legacy.Packet(int(ws[i]), int(cs[i]), payloads[i]))
+                if res is not None:
+                    ready[i] = True
+                    results[i] = res.payload
+        for i in np.nonzero(ready)[0]:
+            c = int(cs[i])
+            out[c] = results[i]
+            # vectorized but stream-identical to per-worker rng.random()
+            # calls guarded by `not have_result` (Generator.random(n) draws
+            # the same sequence as n scalar draws)
+            miss = np.nonzero(~have_result[:, c])[0]
+            if miss.size:
+                ok = rng.random(miss.size) >= drop_prob
+                have_result[miss[ok], c] = True
+    if not have_result.all():
+        raise RuntimeError("aggregation did not complete within max_rounds")
+    flat = out.reshape(-1)[:n]
+    if record_arrivals:
+        return flat, arrivals
+    return flat

@@ -1,0 +1,92 @@
+"""Batched in-switch query operators (paper Sec. 6) on the jitted dataplane.
+
+``db/query.py`` used to push rows through Python loops dispatching tiny jnp
+ops; these kernels stream row *batches* through the same vectorized FPISA
+machinery as the all-reduce dataplane:
+
+* ``topn_keep`` — one fused dispatch per row batch: encode the column,
+  broadcast the threshold planes, FPISA compare (subtract + sign test,
+  integer-only) — the switch-side half of Cheetah-style Top-N pruning.
+* ``groupby_ingest`` — scatter-accumulate a (keys, values) row batch into
+  per-group FPISA accumulator slots with *per-slot sequential semantics*
+  (rows of the same key apply in batch order), using the same rank/round
+  table as ``dataplane.ingest_batch``. Carries a per-slot ``since_flush``
+  counter and renormalize+re-encode flushes the register every
+  ``flush_every`` adds (the paper's Sec. 3.3 headroom bound: ~128 same-scale
+  adds fit 7 headroom bits; flushing at 64 keeps a 2x margin).
+
+Group-by uses the ``full`` FPISA add by default — the paper notes query
+aggregation needs the RSAW extension rather than the FPISA-A approximation
+(Sec. 6.1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import fpisa
+
+from repro.switchsim.dataplane import _rank_table
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name",))
+def topn_keep(values, thresh_exp, thresh_man, *, fmt_name: str = "fp32"):
+    """(B,) packed FP column vs scalar threshold planes -> (B,) bool keep mask
+    (value > threshold), computed as FPISA subtraction + sign test."""
+    fmt = fpisa.FORMATS[fmt_name]
+    planes = fpisa.encode(values, fmt)
+    t_exp = jnp.broadcast_to(thresh_exp, planes.exp.shape)
+    t_man = jnp.broadcast_to(-thresh_man, planes.man.shape)
+    diff, _ = fpisa.fpisa_add_full(planes, fpisa.Planes(t_exp, t_man), fmt)
+    return diff.man > 0
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_slots", "rounds", "variant", "flush_every", "fmt_name"))
+def groupby_ingest(exp, man, since, keys, values, valid, *, num_slots: int,
+                   rounds: int, variant: str = "full", flush_every: int = 64,
+                   fmt_name: str = "fp32"):
+    """Accumulate a row batch into per-group FPISA slots.
+
+    Args:
+      exp/man:  (S,) int32 accumulator planes (S = num_slots).
+      since:    (S,) int32 adds since the slot's last flush.
+      keys:     (B,) int32 group keys in [0, S).
+      values:   (B,) packed FP column.
+      valid:    (B,) bool row mask.
+      rounds:   static: max rows of one key this call applies (>= the batch's
+                max per-key multiplicity, or the remainder is deferred).
+
+    Returns (exp, man, since, deferred)."""
+    fmt = fpisa.FORMATS[fmt_name]
+    add = fpisa.fpisa_add_full if variant == "full" else fpisa.fpisa_a_add
+    planes = fpisa.encode(values, fmt)
+    table, deferred = _rank_table(keys, valid, num_slots, rounds)
+
+    def round_body(carry, pidx):
+        exp, man, since = carry
+        active = pidx >= 0
+        pi = jnp.where(active, pidx, 0)
+        inp = fpisa.Planes(planes.exp[pi], planes.man[pi])
+        newp, _ = add(fpisa.Planes(exp, man), inp, fmt)
+        exp = jnp.where(active, newp.exp, exp)
+        man = jnp.where(active, newp.man, man)
+        since = jnp.where(active, since + 1, since)
+        # periodic flush: renormalize + re-encode the register so long-running
+        # slots never exhaust the int32 headroom. A flush fires at most once
+        # per flush_every adds per slot, so skip the renorm work on the ~98%
+        # of rounds where no slot is due.
+        flush = since >= flush_every
+        def do_flush(exp, man, since):
+            fp = fpisa.encode(fpisa.renormalize(fpisa.Planes(exp, man), fmt), fmt)
+            return (jnp.where(flush, fp.exp, exp), jnp.where(flush, fp.man, man),
+                    jnp.where(flush, 0, since))
+        exp, man, since = lax.cond(
+            jnp.any(flush), do_flush, lambda e, m, s: (e, m, s), exp, man, since)
+        return (exp, man, since), None
+
+    (exp, man, since), _ = lax.scan(round_body, (exp, man, since), table.T)
+    return exp, man, since, deferred

@@ -1,0 +1,251 @@
+"""Batched multi-pipeline dataplane (repro/switchsim): bit-exactness vs the
+per-packet emulator and the jnp FPISA reference, fault-injection property
+sweep, stale/duplicate accounting, deferred-rank resubmission, and the
+switch_emu all-reduce strategy."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import switchsim as ss
+from repro.core import fpisa as F
+from repro.core import switch as sw
+
+RNG = np.random.default_rng(99)
+
+
+def _vec(w=4, n=1024, wide=False):
+    v = RNG.standard_normal((w, n)) * 0.01
+    if wide:
+        v = v * np.exp2(RNG.integers(-12, 12, (w, n)))
+    return v.astype(np.float32)
+
+
+def _arranged(vec: np.ndarray, arrivals: dict, e: int) -> np.ndarray:
+    """Rearrange (W, N) so row i holds, per chunk, the i-th arriving worker's
+    payload — the switch-arrival order the jnp sequential reference needs."""
+    w, n = vec.shape
+    pad = (-n) % e
+    v3 = np.pad(vec, ((0, 0), (0, pad))).reshape(w, -1, e)
+    nchunks = v3.shape[1]
+    out = np.empty_like(v3)
+    for c in range(nchunks):
+        perm = arrivals[c]
+        assert len(perm) == w, "exactly-once violated"
+        out[:, c] = v3[perm, c]
+    return out.reshape(w, -1)
+
+
+# ---------------------------------------------------------------------------
+# parity: batched == per-packet legacy shim, bit for bit, same RNG stream
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("drop,seed", [(0.0, 0), (0.15, 3), (0.5, 11)])
+def test_batched_matches_perpacket_bit_exact(drop, seed):
+    vec = _vec(w=4, n=2048)
+    kw = dict(num_workers=4, num_slots=4, elems_per_packet=64)
+    dp = ss.BatchedDataplane(ss.DataplaneConfig(**kw, num_pipelines=1))
+    legacy = sw.FpisaSwitch(sw.SwitchConfig(**kw))
+    a = ss.run_aggregation(dp, vec, drop_prob=drop, seed=seed)
+    b = ss.run_aggregation(legacy, vec, drop_prob=drop, seed=seed)
+    assert np.array_equal(a.view(np.int32), b.view(np.int32))
+    assert dp.stats["packets"] == legacy.stats["packets"]
+    assert dp.stats["duplicates"] == legacy.stats["duplicates"]
+    assert dp.stats["overwrite"] == legacy.stats["overwrite"]
+    assert dp.stats["overflow"] == legacy.stats["overflow"]
+
+
+# ---------------------------------------------------------------------------
+# property sweep: drop_prob x seed x num_pipelines x variant — the batched
+# aggregate is bit-exact vs the jnp reference replayed in arrival order
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", ["fpisa_a", "full"])
+@pytest.mark.parametrize("pipelines", [1, 3])
+@pytest.mark.parametrize("drop,seed", [(0.0, 0), (0.3, 7), (0.7, 13)])
+def test_sweep_bit_exact_vs_jnp_reference(variant, pipelines, drop, seed):
+    w, e = 4, 64
+    vec = _vec(w=w, n=1024, wide=True)
+    cfg = ss.DataplaneConfig(num_workers=w, num_slots=2, elems_per_packet=e,
+                             num_pipelines=pipelines, variant=variant)
+    dp = ss.BatchedDataplane(cfg)
+    out, arrivals = ss.run_aggregation(dp, vec, drop_prob=drop, seed=seed,
+                                       record_arrivals=True)
+    # exactly-once under loss: every (worker, chunk) contributed exactly once
+    nchunks = -(-1024 // e)
+    assert dp.stats["packets"] == w * nchunks
+    if drop >= 0.3:
+        assert dp.stats["duplicates"] > 0  # loss actually exercised the path
+    ref = np.asarray(F.fpisa_sum_sequential(
+        jnp.asarray(_arranged(vec, arrivals, e)), variant=variant))[:1024]
+    assert np.array_equal(out.view(np.int32), ref.view(np.int32))
+
+
+def test_duplicate_heavy_and_all_drop_rounds():
+    # drop_prob 0.9: most rounds lose most packets, many rounds lose ALL of a
+    # worker's packets, and completed slots re-serve heavily — the aggregate
+    # must still be exactly-once and bit-exact vs the replayed reference.
+    w, e = 3, 32
+    vec = _vec(w=w, n=128)
+    cfg = ss.DataplaneConfig(num_workers=w, num_slots=2, elems_per_packet=e)
+    dp = ss.BatchedDataplane(cfg)
+    out, arrivals = ss.run_aggregation(dp, vec, drop_prob=0.9, seed=5,
+                                       max_rounds=100_000, record_arrivals=True)
+    assert dp.stats["packets"] == w * 4
+    assert dp.stats["duplicates"] > 0
+    ref = np.asarray(F.fpisa_sum_sequential(
+        jnp.asarray(_arranged(vec, arrivals, e))))[:128]
+    assert np.array_equal(out.view(np.int32), ref.view(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# numpy dataplane (the jax-free switch_emu backend) == jitted dataplane
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", ["fpisa_a", "full"])
+def test_numpy_dataplane_matches_jit(variant):
+    vec = _vec(w=4, n=1024, wide=True)
+    cfg = ss.DataplaneConfig(num_workers=4, num_slots=2, elems_per_packet=64,
+                             num_pipelines=3, variant=variant)
+    a = ss.run_aggregation(ss.BatchedDataplane(cfg), vec, drop_prob=0.3, seed=1)
+    npdp = ss.NumpyDataplane(cfg)
+    b = ss.run_aggregation(npdp, vec, drop_prob=0.3, seed=1)
+    assert np.array_equal(a.view(np.int32), b.view(np.int32))
+    assert npdp.stats["packets"] == 4 * 16
+
+
+# ---------------------------------------------------------------------------
+# stale vs duplicate accounting (regression: the pre-refactor emulator
+# conflated stale-window retransmissions with duplicates)
+# ---------------------------------------------------------------------------
+
+
+def test_stale_counter_separate_from_duplicates():
+    e = 8
+    cfg = sw.SwitchConfig(num_workers=2, num_slots=1, elems_per_packet=e)
+    s = sw.FpisaSwitch(cfg)
+    pay = np.ones(e, np.float32)
+    # chunks 0 and 1 complete, filling both physical slots of the double pool
+    for c in (0, 1):
+        assert s.ingest(sw.Packet(0, c, pay)) is None
+        assert s.ingest(sw.Packet(1, c, pay)) is not None
+    # chunk 2 claims chunk 0's recycled slot
+    assert s.ingest(sw.Packet(0, 2, pay)) is None
+    # a retransmission for chunk 0 is now STALE (slot recycled), not a dup
+    assert s.ingest(sw.Packet(1, 0, pay)) is None
+    assert s.stats["stale"] == 1
+    assert s.stats["duplicates"] == 0
+    # a true duplicate: chunk 1 completed and still owns its slot -> cached
+    # result re-served, counted as duplicate
+    res = s.ingest(sw.Packet(0, 1, pay))
+    assert res is not None and np.array_equal(res.payload, 2 * pay)
+    assert s.stats["duplicates"] == 1
+    assert s.stats["stale"] == 1
+    assert s.stats["packets"] == 5
+
+
+# ---------------------------------------------------------------------------
+# deferred resubmission: per-slot occupancy beyond the compiled round count
+# ---------------------------------------------------------------------------
+
+
+def test_rank_overflow_defers_and_preserves_order():
+    w, e = 8, 16
+    cfg = ss.DataplaneConfig(num_workers=w, num_slots=1, elems_per_packet=e,
+                             rounds_per_call=2)  # force deferral: 8 > 2
+    dp = ss.BatchedDataplane(cfg)
+    vec = _vec(w=w, n=e)
+    ready, results, accepted = dp.ingest_batch(
+        np.arange(w), np.zeros(w, np.int64), vec)
+    assert accepted.all() and ready[-1] and not ready[:-1].any()
+    ref = np.asarray(F.fpisa_sum_sequential(jnp.asarray(vec)))
+    assert np.array_equal(results[-1].view(np.int32), ref.view(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# batched query kernels: bit-level order pinning
+# ---------------------------------------------------------------------------
+
+
+def test_topn_keep_matches_cmp_planes():
+    from repro.db import query as q
+    from repro.switchsim import query as swq
+
+    vals = _vec(w=1, n=512, wide=True)[0]
+    t = F.encode(jnp.float32(0.37))
+    keep = np.asarray(swq.topn_keep(jnp.asarray(vals), t.exp, t.man))
+    planes = F.encode(jnp.asarray(vals))
+    ref = q._cmp_planes(planes, F.Planes(
+        jnp.broadcast_to(t.exp, planes.exp.shape),
+        jnp.broadcast_to(t.man, planes.man.shape)))
+    np.testing.assert_array_equal(keep, ref)
+
+
+def test_groupby_ingest_matches_sequential_reference():
+    from repro.switchsim import query as swq
+
+    nslots, rows = 4, 64
+    keys = RNG.integers(0, nslots, rows).astype(np.int32)
+    vals = (RNG.standard_normal(rows) * 10).astype(np.float32)
+    order = np.argsort(keys, kind="stable")
+    k, v = keys[order], vals[order]
+    exp, man, since, deferred = swq.groupby_ingest(
+        jnp.zeros(nslots, jnp.int32), jnp.zeros(nslots, jnp.int32),
+        jnp.zeros(nslots, jnp.int32),
+        jnp.asarray(k), jnp.asarray(v), jnp.ones(rows, bool),
+        num_slots=nslots, rounds=64, flush_every=8)
+    assert not bool(np.asarray(deferred).any())
+    # python reference: per-slot sequential full-FPISA adds with the same
+    # flush-every-8 register renormalization
+    re = np.zeros(nslots, np.int32)
+    rm = np.zeros(nslots, np.int32)
+    rs = np.zeros(nslots, np.int32)
+    for key, val in zip(k, v):
+        planes = F.encode(jnp.float32(val))
+        acc, _ = F.fpisa_add_full(
+            F.Planes(jnp.int32(re[key]), jnp.int32(rm[key])), planes)
+        re[key], rm[key] = int(acc.exp), int(acc.man)
+        rs[key] += 1
+        if rs[key] >= 8:
+            p = F.encode(F.renormalize(F.Planes(jnp.int32(re[key]), jnp.int32(rm[key]))))
+            re[key], rm[key], rs[key] = int(p.exp), int(p.man), 0
+    np.testing.assert_array_equal(np.asarray(exp), re)
+    np.testing.assert_array_equal(np.asarray(man), rm)
+    np.testing.assert_array_equal(np.asarray(since), rs)
+
+
+# ---------------------------------------------------------------------------
+# switch_emu all-reduce strategy == fpisa_seq, bitwise (multi-device)
+# ---------------------------------------------------------------------------
+
+
+SWITCH_EMU_CODE = r"""
+import numpy as np, jax
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.core import allreduce as AR
+
+mesh = compat.make_mesh((2, 4), ("pod", "data"))
+x = (np.random.default_rng(0).standard_normal((8, 2000)) * 0.01).astype(np.float32)
+
+def run(cfg):
+    fn = jax.jit(compat.shard_map(lambda xs: AR.allreduce(xs[0], ("pod","data"), cfg),
+                                  mesh=mesh, in_specs=P(("pod","data")), out_specs=P(),
+                                  check_vma=False))
+    return np.asarray(fn(x.reshape(8,1,2000)))
+
+a = run(AR.AggConfig(strategy="switch_emu"))
+b = run(AR.AggConfig(strategy="fpisa_seq"))
+assert np.array_equal(a.view(np.int32), b.view(np.int32)), "switch_emu != fpisa_seq"
+err = np.abs(a.astype(np.float64) - x.astype(np.float64).sum(0))
+assert np.quantile(err, 0.99) < 1e-5, err.max()
+print("SWITCH_EMU_OK")
+"""
+
+
+def test_switch_emu_strategy_multi_device(multi_device_runner):
+    out = multi_device_runner(SWITCH_EMU_CODE, n_devices=8, timeout=600)
+    assert "SWITCH_EMU_OK" in out
