@@ -10,6 +10,18 @@ import jax
 import numpy as np
 
 
+def smoke() -> bool:
+    """True when BENCH_SMOKE=1: benchmarks shrink to CI-smoke sizes so the
+    whole suite runs in minutes (tests/test_benchmarks.py uses this to assert
+    every module runs and every BENCH_*.json schema stays stable)."""
+    return os.environ.get("BENCH_SMOKE", "0") not in ("0", "", "false")
+
+
+def scaled(full, tiny):
+    """``full`` normally, ``tiny`` under BENCH_SMOKE=1."""
+    return tiny if smoke() else full
+
+
 def timeit(fn, *args, warmup=2, iters=5):
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))

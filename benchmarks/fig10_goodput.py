@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit, write_json
+from benchmarks.common import emit, scaled, timeit, write_json
 from repro.core import fpisa as F
 from repro.core import numerics as nx
 
@@ -64,7 +64,7 @@ def bench_dataplane():
     # --- batched multi-pipeline rate at ~100x the legacy packet volume
     cfg = ss.DataplaneConfig(num_workers=DP_WORKERS, num_slots=128,
                              elems_per_packet=DP_ELEMS, num_pipelines=4)
-    nchunks = 8192  # 8192 * 256 = 2M gradient elements per worker
+    nchunks = scaled(8192, 512)  # 8192 * 256 = 2M gradient elements per worker
     vec = (rng.standard_normal((DP_WORKERS, nchunks * DP_ELEMS)) * 0.01).astype(np.float32)
     # warm: full identical run primes every (batch size, rounds) jit variant
     ss.run_aggregation(ss.BatchedDataplane(cfg), vec, drop_prob=DP_DROP, seed=2)
@@ -93,8 +93,9 @@ def bench_dataplane():
 
 
 def run():
+    n = scaled(N, 1 << 16)
     rng = np.random.default_rng(0)
-    x = jnp.asarray(rng.standard_normal(N).astype(np.float32) * 0.01)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32) * 0.01)
     scale = jnp.float32(2.0 ** 20)
 
     # SwitchML host path: quantize (x*scale -> int32) + dequantize
@@ -117,7 +118,7 @@ def run():
         ("fig10.fpisa_host_worstcase", jax.jit(fpisa_host)),
     ]:
         dt, _ = timeit(fn, x)
-        elems_per_s = N / dt
+        elems_per_s = n / dt
         cores = max(LINE_RATE_ELEMS / elems_per_s, 0.0)
         emit(name, dt * 1e6, f"Melem_s={elems_per_s/1e6:.0f};cores_for_100Gbps={cores:.2f}")
         host[name.split(".", 1)[1]] = {

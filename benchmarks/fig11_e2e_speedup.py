@@ -1,15 +1,27 @@
 """Paper Fig. 11 — end-to-end training speedup of FPISA vs SwitchML across 7
-DNN benchmarks. Without a 100 Gbps testbed we combine (a) MEASURED host
-transform cost per element (fig10 paths) with (b) the paper's own link model
-(100 Gbps line rate, 2 communication rounds for SwitchML vs 1 for FPISA on
-the scale-factor exchange) over the 7 models' gradient sizes. Reported as
-speedup in aggregation step time for the CPU-constrained (2-core) case."""
-import jax
-import jax.numpy as jnp
+DNN benchmarks, plus the repo's own end-to-end aggregation-step win from
+block-aligned gradient bucketing (core/bucketer.py).
+
+Two parts:
+
+1. Link model (paper): MEASURED host transform cost per element combined with
+   the paper's 100 Gbps line-rate model (2 communication rounds for SwitchML
+   vs 1 for FPISA on the scale-factor exchange) over the 7 models' gradient
+   sizes, for the CPU-constrained (2-core) case.
+2. Bucketing (measured): aggregation step time of per-leaf ``allreduce_tree``
+   vs the bucketed path on a ragged ~150-leaf gradient pytree shaped like a
+   real LM's parameter list. Bucketed must be bit-identical AND no slower —
+   both land in ``BENCH_fig11.json`` (the acceptance gate for ISSUE 3).
+"""
 import numpy as np
 
-from benchmarks.common import emit, timeit
-from repro.core import fpisa as F
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import emit, scaled, timeit, write_json
+from repro import compat
+from repro.core.allreduce import AggConfig, allreduce_tree
 
 MODELS = {  # gradient elements (paper's benchmarks, param counts)
     "MobileNetV2": 3.5e6, "GoogleNet": 6.6e6, "ResNet-50": 25.6e6,
@@ -18,16 +30,73 @@ MODELS = {  # gradient elements (paper's benchmarks, param counts)
 LINK_ELEMS_PER_S = 100e9 / 8 / 4  # FP32 elements/s at 100 Gbps
 CORES = 2
 
+BUCKET_BYTES = 4 << 20
+
+
+def _gradient_tree(rng, n_layers: int):
+    """Ragged pytree shaped like an LM's parameter list: for each layer a
+    large matmul leaf, a small matmul leaf, and a tiny (non-block-multiple)
+    norm/bias vector — the per-leaf path's worst case."""
+    tree = {}
+    for i in range(n_layers):
+        tree[f"l{i:03d}.ffn"] = (rng.standard_normal(16384) * 0.01)
+        tree[f"l{i:03d}.attn"] = (rng.standard_normal(4096) * 0.01)
+        tree[f"l{i:03d}.norm"] = (rng.standard_normal(777) * 0.01)
+    return {k: jnp.asarray(v.astype(np.float32)) for k, v in tree.items()}
+
+
+def bench_bucketing():
+    """Measured per-leaf vs bucketed aggregation step time (+ parity bit)."""
+    rng = np.random.default_rng(0)
+    n_layers = scaled(64, 6)
+    tree = _gradient_tree(rng, n_layers)
+    n_leaves = len(tree)
+    n_elems = sum(v.size for v in tree.values())
+    mesh = compat.make_mesh((jax.device_count(),), ("data",))
+
+    def make(bucket_bytes: int):
+        cfg = AggConfig(strategy="fpisa", backend="jnp",
+                        bucket_bytes=bucket_bytes)
+        return jax.jit(compat.shard_map(
+            lambda t: allreduce_tree(t, ("data",), cfg), mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P(), tree),),
+            out_specs=jax.tree.map(lambda _: P(), tree), check_vma=False))
+
+    per_leaf_fn, bucketed_fn = make(0), make(BUCKET_BYTES)
+    a, b = per_leaf_fn(tree), bucketed_fn(tree)
+    bit_identical = all(
+        bool(jnp.all(a[k].view(jnp.int32) == b[k].view(jnp.int32)))
+        for k in tree)
+
+    iters = scaled(10, 3)
+    dt_leaf, _ = timeit(per_leaf_fn, tree, warmup=2, iters=iters)
+    dt_buck, _ = timeit(bucketed_fn, tree, warmup=2, iters=iters)
+    speedup = dt_leaf / dt_buck
+    emit("fig11.bucketed_agg_step", dt_buck * 1e6,
+         f"per_leaf_us={dt_leaf*1e6:.0f};speedup={speedup:.2f}x;"
+         f"bit_identical={int(bit_identical)}")
+    return {
+        "n_leaves": n_leaves,
+        "n_elems": int(n_elems),
+        "bucket_bytes": BUCKET_BYTES,
+        "per_leaf_us": dt_leaf * 1e6,
+        "bucketed_us": dt_buck * 1e6,
+        "speedup": speedup,
+        "bucketed_le_per_leaf": bool(dt_buck <= dt_leaf),
+        "bit_identical": bit_identical,
+    }
+
 
 def run():
     rng = np.random.default_rng(0)
-    n = 1 << 22
+    n = scaled(1 << 22, 1 << 16)
     x = jnp.asarray(rng.standard_normal(n).astype(np.float32) * 0.01)
     scale = jnp.float32(2.0 ** 20)
     sw = jax.jit(lambda v: (jnp.round(v * scale).astype(jnp.int32).astype(jnp.float32) / scale))
     dt_sw, _ = timeit(sw, x)
     sw_elems_per_core = n / dt_sw
 
+    link = {}
     for name, g in MODELS.items():
         t_link = g / LINK_ELEMS_PER_S
         # SwitchML: host transform on CORES cores + extra scale-factor round
@@ -35,4 +104,8 @@ def run():
         t_sw = max(g / (sw_elems_per_core * CORES), t_link * 1.05)
         t_fp = t_link  # FPISA: raw FP32 at line rate, no host transform
         emit(f"fig11.{name}", t_sw * 1e6, f"speedup={t_sw / t_fp:.3f}")
+        link[name] = {"t_switchml_s": t_sw, "t_fpisa_s": t_fp,
+                      "speedup": t_sw / t_fp}
     emit("fig11.paper_claim", 0, "up_to_1.859x_at_2cores")
+
+    write_json("fig11", {"link_model": link, "bucketing": bench_bucketing()})

@@ -10,7 +10,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, write_json
+from benchmarks.common import emit, scaled, write_json
 from repro.db import query as q
 
 ROWS = 2_000_000
@@ -18,10 +18,12 @@ GROUP_ROWS = 200_000
 
 
 def run():
+    rows = scaled(ROWS, 60_000)
+    group_rows = scaled(GROUP_ROWS, 20_000)
     rng = np.random.default_rng(3)
-    ad_revenue = (rng.gamma(2.0, 50.0, ROWS)).astype(np.float32)  # uservisits
-    keys = rng.integers(0, 64, ROWS)
-    results = {"rows": ROWS, "group_rows": GROUP_ROWS}
+    ad_revenue = (rng.gamma(2.0, 50.0, rows)).astype(np.float32)  # uservisits
+    keys = rng.integers(0, 64, rows)
+    results = {"rows": rows, "group_rows": group_rows}
 
     # Top-N (in-switch pruning, FP comparison)
     t0 = time.perf_counter(); pruner = q.TopNPruner(n=10)
@@ -38,12 +40,12 @@ def run():
         "switch_s": t_sw, "baseline_s": t_base,
         "prune_rate": pruner.stats.prune_rate,
         "rows_to_master": pruner.stats.rows_out,
-        "rows_per_s": ROWS / t_sw,
+        "rows_per_s": rows / t_sw,
     }
 
     # group-by sum over the batched scatter-accumulate dataplane kernel
     gmax = q.GroupBySum(num_slots=64, variant="full")
-    gk, gv = keys[:GROUP_ROWS], ad_revenue[:GROUP_ROWS]
+    gk, gv = keys[:group_rows], ad_revenue[:group_rows]
     t0 = time.perf_counter()
     agg = gmax.run(gk, gv)
     t_g = time.perf_counter() - t0
@@ -56,7 +58,7 @@ def run():
     results["groupby_sum"] = {
         "switch_s": t_g, "baseline_s": t_gbase, "max_rel_err": err,
         "rows_to_master": gmax.stats.rows_out,
-        "rows_per_s": GROUP_ROWS / t_g,
+        "rows_per_s": group_rows / t_g,
     }
 
     # TPC-H Q3-like: top-10 by (extendedprice) with selection predicate

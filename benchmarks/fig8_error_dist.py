@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, scaled
 from repro.configs import get_smoke_config
 from repro.core import fpisa as F
 from repro.models.registry import build
@@ -22,8 +22,10 @@ def run():
     opt = optimizers.init(params, opt_cfg)
     grad_fn = jax.jit(jax.value_and_grad(model.loss))
 
+    steps = scaled(30, 3)
+    snap = {0: "early", steps // 2: "middle", steps - 1: "final"}
     phases = {}
-    for step in range(30):
+    for step in range(steps):
         gs = []
         for w in range(WORKERS):
             toks = jax.random.randint(
@@ -33,14 +35,14 @@ def run():
             gs.append(np.concatenate([np.asarray(l, np.float32).ravel()
                                       for l in jax.tree.leaves(g)]))
         stacked = np.stack(gs)
-        if step in (0, 15, 29):
+        if step in snap:
             out, stats = F.fpisa_sum_sequential(
                 jnp.asarray(stacked), variant="fpisa_a", return_stats=True
             )
             exact = stacked.astype(np.float64).sum(0)
             err = np.abs(np.asarray(out, np.float64) - exact)
             nz = err > 0
-            phase = {0: "early", 15: "middle", 29: "final"}[step]
+            phase = snap[step]
             in_band = np.mean((err[nz] >= 1e-10) & (err[nz] <= 1e-8)) if nz.any() else 0
             phases[phase] = dict(
                 band=float(in_band),

@@ -5,16 +5,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, scaled
 from repro.configs import get_smoke_config
 from repro.core import fpisa as F
 from repro.models.registry import build
 from repro.optim import optimizers
 
-WORKERS, STEPS = 4, 25
+WORKERS = 4
 
 
 def _train(mode):
+    STEPS = scaled(25, 4)
     cfg = get_smoke_config("qwen1.5-0.5b").with_(num_layers=2, d_model=64)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))

@@ -11,7 +11,7 @@ asserted."""
 import json
 import os
 
-from benchmarks.common import emit, timeit, write_json
+from benchmarks.common import emit, scaled, timeit, write_json
 
 RESULTS = [
     ("single", "results/dryrun_single.jsonl"),
@@ -80,7 +80,7 @@ def markdown_table(rows):
 PLANE_TRAFFIC = {"jnp": 2, "two_pass": 8, "fused": 2}
 
 
-def kernel_bench(r=2048, b=256, preshift=1):
+def kernel_bench(r=None, b=256, preshift=1):
     """Times the three encode->align implementations on an (r, b) f32 grid and
     returns {variant: {seconds, eff_gbs, planes_moved}}. Effective bandwidth
     counts only the USEFUL bytes (x in + aligned man out + bmax out) — extra
@@ -91,6 +91,8 @@ def kernel_bench(r=2048, b=256, preshift=1):
     from repro.core import fpisa, numerics as nx
     from repro.kernels import ops
 
+    if r is None:
+        r = scaled(2048, 256)
     x = jnp.asarray(
         (np.random.default_rng(0).standard_normal((r, b))
          * np.exp2(np.random.default_rng(1).integers(-8, 8, (r, b)))).astype(np.float32))

@@ -11,16 +11,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, scaled, timeit
 from repro.core import fpisa as F
 
 N = 1 << 20
 
 
 def run():
+    n = scaled(N, 1 << 14)
     rng = np.random.default_rng(0)
-    x = jnp.asarray(rng.standard_normal(N), jnp.float32)
-    y = jnp.asarray(rng.standard_normal(N), jnp.float32)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(n), jnp.float32)
 
     native_add = jax.jit(lambda a, b: a + b)
     fpisa_encode = jax.jit(lambda a: F.encode(a))
@@ -42,8 +43,11 @@ def run():
     ]
     for name, fn, args in rows:
         dt, _ = timeit(fn, *args)
-        flops = (jax.jit(fn).lower(*args).compile().cost_analysis() or {}).get("flops", 0)
-        emit(name, dt * 1e6, f"x_native={dt/t_add:.2f};ops_per_elem={flops/N:.1f}")
+        ca = jax.jit(fn).lower(*args).compile().cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # old jax returns [dict]
+            ca = ca[0] if ca else {}
+        flops = ca.get("flops", 0)
+        emit(name, dt * 1e6, f"x_native={dt/t_add:.2f};ops_per_elem={flops/n:.1f}")
     # paper's silicon numbers for context (um^2 at 15nm, Tab. 1)
     emit("tab1.paper_area_default_alu", 0, "um2=505.4")
     emit("tab1.paper_area_fpisa_alu", 0, "um2=618.6;ratio=1.22")

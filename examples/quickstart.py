@@ -10,6 +10,7 @@ The production path honors the same knobs as the launch CLIs
 (launch/train.py, launch/dryrun.py):
   --agg-backend {auto,jnp,pallas}   encode/decode transform backend
   --chunk-elems N                   stream the gradient in N-element chunks
+  --bucket-bytes N                  bucketed whole-pytree aggregation (step 4)
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--agg-backend jnp]
 """
@@ -33,6 +34,9 @@ ap.add_argument("--chunk-elems", type=int, default=0,
                 help="process the flattened gradient in chunks of this many "
                      "elements (matches launch/dryrun.py --agg-chunk; 0 = "
                      "whole-tensor)")
+ap.add_argument("--bucket-bytes", type=int, default=1 << 16,
+                help="wire-bucket size for the whole-pytree demo in step 4 "
+                     "(matches launch/train.py --bucket-bytes)")
 args = ap.parse_args()
 backend = resolve_backend(args.agg_backend)
 
@@ -100,3 +104,36 @@ out2 = jnp.concatenate([block_aggregate(grads[perm][:, lo:lo + chunk])
                         for lo in range(0, N, chunk)])
 print("permutation-invariant bit-exact:", bool(jnp.all(out == out2)),
       "(float sums are NOT — this is the production win)")
+
+# --- 4. bucketed whole-pytree aggregation (what --bucket-bytes turns on) ---
+# The trainer never aggregates one tensor: it aggregates a pytree of ragged
+# leaves. Per-leaf dispatch pays the encode/decode overhead per LEAF;
+# bucketing flattens the tree into fixed-size block-aligned wire buckets
+# (a block never spans two leaves), streams them double-buffered, and stays
+# bit-identical. See core/bucketer.py and DESIGN.md §3.
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.allreduce import AggConfig, allreduce_tree
+
+mesh = compat.make_mesh((jax.device_count(),), ("data",))
+tree = {f"layer{i}": jnp.asarray(
+    (rng.standard_normal(n) * 0.01).astype(np.float32))
+    for i, n in enumerate((4096, 700, 13 * 37, 2048, 5))}
+
+
+def agg_tree(bucket_bytes: int):
+    cfg = AggConfig(strategy="fpisa", backend=args.agg_backend,
+                    bucket_bytes=bucket_bytes)
+    fn = compat.shard_map(
+        lambda t: allreduce_tree(t, ("data",), cfg), mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P(), tree),),
+        out_specs=jax.tree.map(lambda _: P(), tree), check_vma=False)
+    return jax.jit(fn)(tree)
+
+
+per_leaf, bucketed = agg_tree(0), agg_tree(args.bucket_bytes)
+same = all(bool(jnp.all(per_leaf[k].view(jnp.int32) == bucketed[k].view(jnp.int32)))
+           for k in tree)
+print(f"\nbucketed tree aggregation ({args.bucket_bytes} B buckets) "
+      f"bit-identical to per-leaf: {same}")

@@ -25,6 +25,10 @@ def main():
     ap.add_argument("--agg-chunk", type=int, default=0,
                     help="stream the aggregation through chunks of this many "
                          "elements (0 = whole-tensor)")
+    ap.add_argument("--bucket-bytes", type=int, default=0,
+                    help="stream the gradient pytree through fixed-size "
+                         "block-aligned wire buckets (core/bucketer.py; "
+                         "bit-identical to per-leaf; 0 = per-leaf)")
     ap.add_argument("--ckpt-dir", default="/tmp/fpisa_train_lm")
     args = ap.parse_args()
 
@@ -38,7 +42,7 @@ def main():
     params, opt, hist = train_loop(
         cfg, steps=args.steps, global_batch=8, seq_len=256,
         agg_strategy=args.agg, agg_backend=args.agg_backend,
-        agg_chunk=args.agg_chunk,
+        agg_chunk=args.agg_chunk, agg_bucket_bytes=args.bucket_bytes,
         ckpt_dir=args.ckpt_dir, ckpt_every=50,
         log_every=10,
     )

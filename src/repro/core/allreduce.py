@@ -38,6 +38,11 @@ wire_bits  : 32 (default), 16 or 8 — beyond-paper compression: mantissas are
 hierarchical: on a multi-pod mesh, reduce-scatter in-pod over `data`, psum
              across `pod`, all-gather in-pod — lets the cross-pod hop use a
              narrower wire than the in-pod hop.
+bucket_bytes: tree-level bucketing for ``allreduce_tree`` — the whole
+             gradient pytree is flattened into fixed-size block-aligned wire
+             buckets, scheduled in reverse-autograd order and dispatched
+             double-buffered (core/bucketer.py, DESIGN.md §3/§5). Bit-identical
+             to the per-leaf path; 0 = legacy per-leaf tree_map.
 
 Backends
 --------
@@ -100,6 +105,11 @@ class AggConfig:
     chunk_elems: int = 0
     # encode/decode transform backend: "jnp" | "pallas" | "auto" (module doc).
     backend: str = "auto"
+    # tree-level bucketing (core/bucketer.py): flatten the gradient pytree
+    # into fixed-size wire buckets (leaf offsets padded to block boundaries so
+    # every strategy stays bit-identical to the per-leaf path) and dispatch
+    # them double-buffered. 0 = legacy per-leaf tree_map. See DESIGN.md §3.
+    bucket_bytes: int = 0
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -196,12 +206,32 @@ def native_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
 # ---------------------------------------------------------------------------
 
 
+def _pow2(e) -> jax.Array:
+    """Exact float32 2^e for integer e in [-126, 127], by bit assembly.
+
+    ``jnp.exp2`` is off by ulps for |e| >~ 64 on some XLA CPU backends, which
+    silently breaks exact power-of-two rescaling; building the exponent field
+    directly is exact by construction."""
+    return nx.bitcast_i32_to_f32((jnp.asarray(e, jnp.int32) + 127) << 23)
+
+
 def switchml_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
     """Fixed-point aggregation with a per-chunk scale-factor round trip.
 
     Mirrors SwitchML's host logic: chunk c uses scale 2^(man_bits) / 2^e_max(c)
     where e_max is agreed via a *separate collective round* (the overhead FPISA
     eliminates). Values are quantized to ints, int-psum'd, dequantized.
+
+    The scale exponent k = man_bits - s - (e_max - bias) reaches +-~150 at the
+    exponent extremes, past float32's 2^+-126 — a single ``exp2(k)`` factor
+    goes inf for blocks whose max is a small normal (flushing them to zero
+    through inf/NaN laundering), and ``exp2`` itself is not even exact for
+    |k| >~ 64 on some XLA backends. The scale is therefore applied as two
+    bit-assembled power-of-two half-factors (exact by construction), so every
+    multiply is an exact scaling and in-range blocks quantize identically to
+    the ideal single-factor formulation. All-zero / all-denormal blocks
+    (e_max == 0) have no finite scale and quantize to exactly 0 by definition
+    (see tests/test_wire_edges.py).
     """
     axes = tuple(axis_names)
     w = _axis_size(axes)
@@ -217,11 +247,17 @@ def switchml_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
     # quantize: x / 2^(bmax - bias) * 2^(man_bits - s); s guards the int32 sum
     s = nx.required_preshift(w, fmt)
     be = jnp.repeat(bmax, cfg.block, axis=-1)
-    scale = jnp.exp2((fmt.man_bits - s) - (be - fmt.bias).astype(jnp.float32))
-    q = jnp.round(flat * scale).astype(jnp.int32)
+    k = (fmt.man_bits - s) - (be - fmt.bias)
+    k1 = k // 2
+    k2 = k - k1
+    live = be > 0
+    q = jnp.where(
+        live, jnp.round((flat * _pow2(k1)) * _pow2(k2)), 0.0,
+    ).astype(jnp.int32)
     # ---- round 2: integer aggregation (the in-switch op) ----
     qsum = lax.psum(q, axes)
-    out = qsum.astype(jnp.float32) / scale
+    out = jnp.where(
+        live, (qsum.astype(jnp.float32) * _pow2(-k1)) * _pow2(-k2), 0.0)
     return _unflatten(out, pad, orig_shape, orig_dtype)
 
 
@@ -230,13 +266,27 @@ def switchml_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
 # ---------------------------------------------------------------------------
 
 
+def _check_wire_capacity(w: int, wire_bits: int) -> None:
+    """No shift can make a narrow wire safe beyond w = 2^(wire_bits - 1)
+    summands: the arithmetic right shift floors every negative mantissa at -1
+    (round toward -inf), so a same-signed reduction can always reach -w —
+    past the wire dtype's negative rail once w exceeds it. Refused loudly
+    rather than silently wrapping (see tests/test_wire_edges.py)."""
+    if wire_bits < 32 and w > 1 << (wire_bits - 1):
+        raise ValueError(
+            f"wire_bits={wire_bits} cannot carry a {w}-way sum: negative "
+            f"mantissas floor at -1 under the arithmetic pre-shift, so the "
+            f"reduction can reach -{w} < -2^{wire_bits - 1}")
+
+
 def _wire_shift(fmt: fpisa.FpFormat, w: int, wire_bits: int) -> int:
     """Extra right-shift so each aligned mantissa fits in `wire_bits` signed
     ints AND the integer sum over w workers cannot overflow the wire dtype
-    during an associative reduction."""
+    during an associative reduction (DESIGN.md §2)."""
     s = nx.required_preshift(w, fmt)
     if wire_bits >= 32:
         return s
+    _check_wire_capacity(w, wire_bits)
     # element magnitude < 2^(man_bits + 1 - total_shift); need the *sum* to fit:
     # w * 2^(man_bits + 1 - t) <= 2^(wire_bits - 1)
     t = fmt.man_bits + 1 + math.ceil(math.log2(max(w, 1))) - (wire_bits - 1)
@@ -274,6 +324,51 @@ def fpisa_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
     return _unflatten(out, pad, orig_shape, orig_dtype)
 
 
+def _hier_collect(man: jax.Array, data_axis: str, pod_axis: str,
+                  cfg: AggConfig, shift: int):
+    """Two-level integer collective: in-pod reduce-scatter + cross-pod psum.
+
+    Returns (man_shard, pod_shift). Split out of the monolithic hierarchical
+    path so the bucketer's double-buffered dispatch (core/bucketer.py) can
+    overlap this phase with the encode of the next bucket.
+    """
+    fmt = cfg.fmt
+    w_data = compat.axis_size(data_axis)
+    w_pod = compat.axis_size(pod_axis)
+    # level 1: in-pod reduce-scatter (int32 wire on ICI)
+    man_shard = lax.psum_scatter(man, data_axis, scatter_dimension=0, tiled=True)
+    # level 2: cross-pod integer psum, optionally narrow wire. The in-pod
+    # partial sums carry up to man_bits+1+log2(w_data) magnitude bits; a
+    # narrower cross-pod wire requires one extra truncating shift, applied
+    # ONCE, after the full-precision in-pod reduction (optimal ordering:
+    # precision is only given up on the expensive hop).
+    pod_bits = cfg.pod_wire_bits or cfg.wire_bits
+    pod_shift = 0
+    if pod_bits < 32:
+        # same floor-at--1 rail as _wire_shift, for the cross-pod summand count
+        _check_wire_capacity(w_pod, pod_bits)
+        partial_mag_bits = (fmt.man_bits + 1 - shift) + math.ceil(math.log2(max(w_data, 1)))
+        pod_shift = max(0, partial_mag_bits + math.ceil(math.log2(max(w_pod, 1))) - (pod_bits - 1))
+        man_shard = nx.arshift(man_shard, pod_shift)
+        if pod_bits == 16:
+            man_shard = man_shard.astype(jnp.int16)
+        elif pod_bits == 8:
+            man_shard = man_shard.astype(jnp.int8)
+    man_shard = lax.psum(man_shard, pod_axis)
+    return man_shard, pod_shift
+
+
+def _hier_finish(man_shard: jax.Array, bmax: jax.Array, shift: int,
+                 pod_shift: int, data_axis: str, cfg: AggConfig, backend: str):
+    """Delayed renorm on the owned shard only, then gather packed FP."""
+    w_data = compat.axis_size(data_axis)
+    idx = lax.axis_index(data_axis)
+    blocks_per_shard = bmax.shape[0] // w_data
+    bmax_shard = lax.dynamic_slice_in_dim(bmax, idx * blocks_per_shard, blocks_per_shard)
+    out_shard = _decode(man_shard, bmax_shard, shift + pod_shift, cfg, backend)
+    return lax.all_gather(out_shard, data_axis, axis=0, tiled=True)
+
+
 def fpisa_allreduce_hierarchical(
     x: jax.Array,
     data_axis: str,
@@ -306,32 +401,8 @@ def fpisa_allreduce_hierarchical(
     # exponent agreement is global (pmax over both axes) so mantissa scales
     # are compatible across both reduction levels
     man, bmax = _encode_align(flat, (data_axis, pod_axis), shift, cfg, backend)
-
-    # level 1: in-pod reduce-scatter (int32 wire on ICI)
-    man_shard = lax.psum_scatter(man, data_axis, scatter_dimension=0, tiled=True)
-    # level 2: cross-pod integer psum, optionally narrow wire. The in-pod
-    # partial sums carry up to man_bits+1+log2(w_data) magnitude bits; a
-    # narrower cross-pod wire requires one extra truncating shift, applied
-    # ONCE, after the full-precision in-pod reduction (optimal ordering:
-    # precision is only given up on the expensive hop).
-    pod_bits = cfg.pod_wire_bits or cfg.wire_bits
-    pod_shift = 0
-    if pod_bits < 32:
-        partial_mag_bits = (fmt.man_bits + 1 - shift) + math.ceil(math.log2(max(w_data, 1)))
-        pod_shift = max(0, partial_mag_bits + math.ceil(math.log2(max(w_pod, 1))) - (pod_bits - 1))
-        man_shard = nx.arshift(man_shard, pod_shift)
-        if pod_bits == 16:
-            man_shard = man_shard.astype(jnp.int16)
-        elif pod_bits == 8:
-            man_shard = man_shard.astype(jnp.int8)
-    man_shard = lax.psum(man_shard, pod_axis)
-    # delayed renorm on the owned shard only, then gather packed FP32
-    nblk = man.shape[0] // cfg.block
-    idx = lax.axis_index(data_axis)
-    blocks_per_shard = nblk // w_data
-    bmax_shard = lax.dynamic_slice_in_dim(bmax, idx * blocks_per_shard, blocks_per_shard)
-    out_shard = _decode(man_shard, bmax_shard, shift + pod_shift, cfg, backend)
-    out = lax.all_gather(out_shard, data_axis, axis=0, tiled=True)
+    man_shard, pod_shift = _hier_collect(man, data_axis, pod_axis, cfg, shift)
+    out = _hier_finish(man_shard, bmax, shift, pod_shift, data_axis, cfg, backend)
     return _unflatten(out, pad, orig_shape, orig_dtype)
 
 
@@ -419,6 +490,16 @@ def _chunked_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
 
 
 def allreduce_tree(tree, axis_names: Sequence[str], cfg: AggConfig):
-    """Aggregate every leaf of a gradient pytree (bucketed per-leaf so XLA's
-    latency-hiding scheduler can overlap collectives with other work)."""
+    """Aggregate every leaf of a gradient pytree.
+
+    With ``cfg.bucket_bytes`` set, the whole pytree is flattened into
+    fixed-size block-aligned wire buckets and streamed double-buffered
+    (core/bucketer.py) — bit-identical to the per-leaf path but with the
+    per-collective encode/decode overhead amortized over whole buckets.
+    Otherwise: legacy per-leaf tree_map (XLA's latency-hiding scheduler still
+    overlaps the independent per-leaf collectives with other work)."""
+    if cfg.bucket_bytes:
+        from repro.core import bucketer
+
+        return bucketer.bucketed_allreduce_tree(tree, axis_names, cfg)
     return jax.tree_util.tree_map(lambda g: allreduce(g, axis_names, cfg), tree)

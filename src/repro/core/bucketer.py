@@ -1,0 +1,331 @@
+"""Block-aligned gradient bucketing with overlapped streaming aggregation.
+
+The switch in the paper aggregates a *stream* of fixed-size packets cut from
+the whole gradient; SwitchML (Sapio et al., NSDI'21) shows that the
+end-to-end training win comes from exactly this bucketing + streaming — not
+from hundreds of tiny per-leaf collectives, each paying full encode/decode
+overhead. This module is the host-side analogue for the FPISA collectives in
+``core/allreduce.py``:
+
+* ``make_plan``   — a static :class:`BucketPlan`: the gradient pytree's leaves
+                    are grouped by dtype, scheduled in reverse-autograd order
+                    (the leaves whose grads become ready first during backprop
+                    go on the wire first), and packed into fixed-size wire
+                    buckets. Every leaf starts at an offset padded up to the
+                    FPISA block boundary and large leaves are split only at
+                    block multiples, so **a block never spans two leaves** and
+                    every block's contents are identical to the per-leaf
+                    path's blocks — which is what makes every strategy
+                    bit-identical to per-leaf aggregation (DESIGN.md §3).
+* ``bucketed_allreduce_tree`` — packs, dispatches, and reassembles. For the
+                    production ``fpisa`` strategy the dispatch is
+                    **double-buffered**: the encode of bucket *i* and the
+                    decode of bucket *i-1* are issued between the collective
+                    launches of buckets *i-1* and *i*, so XLA's latency-hiding
+                    scheduler overlaps transform work with wire time. On
+                    hierarchical (pod, data) meshes, consecutive buckets are
+                    striped across the in-pod shard ranks (whole-shard roll,
+                    DESIGN.md §5) so the cross-pod hop of consecutive buckets
+                    leaves from rotating DCI uplinks.
+
+Bit-identity contract: for every strategy / backend / wire width, the result
+equals ``jax.tree_util.tree_map(lambda g: allreduce(g, ...), tree)`` bit for
+bit (enforced by tests/test_bucketer.py). When both ``bucket_bytes`` and
+``chunk_elems`` are set the identity additionally requires
+``chunk_elems % block == 0`` (block groupings of the two paths coincide only
+at block-aligned chunk cuts; same caveat as per-leaf chunking itself).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import compat
+from repro.core import allreduce as ar
+
+
+def _ceil_to(n: int, q: int) -> int:
+    return -(-n // q) * q
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """A block-aligned slice of one leaf placed inside one bucket."""
+
+    leaf: int    # index into the pytree's flattened leaf list
+    start: int   # element offset within the flattened leaf
+    size: int    # real leaf elements carried (0 = pure padding tail)
+    span: int    # slots occupied in the bucket (block multiple, >= size)
+    offset: int  # start offset within the bucket buffer
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    index: int                     # dispatch order (reverse-autograd)
+    group: str                     # dtype group key, e.g. "float32"
+    elems: int                     # buffer length (sum of spans; block-aligned)
+    segments: tuple[Segment, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    block: int
+    bucket_elems: int              # target capacity per bucket, in elements
+    buckets: tuple[Bucket, ...]    # in dispatch order
+    passthrough: tuple[int, ...]   # leaf indices routed per-leaf (non-float /
+                                   # zero-size): bucketing has nothing to gain
+
+
+def make_plan(leaves: Sequence, *, block: int, bucket_bytes: int) -> BucketPlan:
+    """Build the static packing plan from leaf shapes/dtypes.
+
+    ``leaves`` may be arrays or ShapeDtypeStructs (the plan never touches
+    values, so it works under ``jax.eval_shape``). Leaves are walked in
+    REVERSE flatten order — gradients of the deepest layers become ready
+    first during backprop, so their buckets go on the wire first — and packed
+    greedily into per-dtype-group open buckets. Buckets are dispatched in the
+    order they fill up.
+    """
+    if block <= 0:
+        raise ValueError(f"block must be positive, got {block}")
+    if bucket_bytes <= 0:
+        raise ValueError(f"bucket_bytes must be positive, got {bucket_bytes}")
+
+    buckets: list[Bucket] = []
+    passthrough: list[int] = []
+    open_buckets: dict[str, list[Segment]] = {}
+    open_fill: dict[str, int] = {}
+    capacity: dict[str, int] = {}
+
+    def seal(group: str) -> None:
+        segs = open_buckets.pop(group, [])
+        if segs:
+            buckets.append(Bucket(
+                index=len(buckets), group=group,
+                elems=sum(s.span for s in segs), segments=tuple(segs)))
+        open_fill.pop(group, None)
+
+    for i in reversed(range(len(leaves))):
+        leaf = leaves[i]
+        dtype = jnp.dtype(leaf.dtype)
+        size = int(math.prod(leaf.shape)) if leaf.shape else 1
+        if size == 0 or not jnp.issubdtype(dtype, jnp.floating):
+            passthrough.append(i)
+            continue
+        group = dtype.name
+        if group not in capacity:
+            capacity[group] = max(block, _ceil_to(bucket_bytes // dtype.itemsize, block))
+        cap = capacity[group]
+        padded = _ceil_to(size, block)
+        start = 0
+        while start < padded:
+            fill = open_fill.get(group, 0)
+            take = min(padded - start, cap - fill)
+            open_buckets.setdefault(group, []).append(Segment(
+                leaf=i, start=start, size=max(0, min(size, start + take) - start),
+                span=take, offset=fill))
+            open_fill[group] = fill + take
+            start += take
+            if open_fill[group] >= cap:
+                seal(group)
+    for group in list(open_buckets):
+        seal(group)
+
+    cap_any = max(capacity.values()) if capacity else block
+    return BucketPlan(block=block, bucket_elems=cap_any,
+                      buckets=tuple(buckets), passthrough=tuple(passthrough))
+
+
+def plan_for_config(leaves: Sequence, cfg: ar.AggConfig) -> BucketPlan:
+    return make_plan(leaves, block=cfg.block, bucket_bytes=cfg.bucket_bytes)
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack
+# ---------------------------------------------------------------------------
+
+
+def _stage_dtype(cfg: ar.AggConfig, group: str):
+    """Wire staging dtype of a bucket buffer — the same cast the per-leaf
+    path applies to each leaf before aggregating (cast is elementwise, so
+    cast-then-concat == concat-then-cast)."""
+    if cfg.strategy == "native":
+        return jnp.dtype(group)  # native psums in the leaf dtype
+    if cfg.strategy == "fpisa":
+        return ar._PACKED[cfg.fmt_name]
+    return jnp.float32  # switchml / fpisa_seq / switch_emu
+
+
+def pack_bucket(bucket: Bucket, flat_leaves, stage_dtype) -> jax.Array:
+    """Assemble one bucket buffer from (already flattened) leaves."""
+    parts = []
+    for s in bucket.segments:
+        piece = lax.slice(flat_leaves[s.leaf], (s.start,), (s.start + s.size,)) \
+            if s.size else None
+        if piece is not None:
+            piece = piece.astype(stage_dtype)
+            if s.span > s.size:
+                piece = jnp.pad(piece, (0, s.span - s.size))
+        else:
+            piece = jnp.zeros((s.span,), stage_dtype)
+        parts.append(piece)
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def unpack_bucket(bucket: Bucket, out: jax.Array, pieces: dict) -> None:
+    """Scatter an aggregated bucket buffer back into per-leaf piece lists."""
+    for s in bucket.segments:
+        if s.size:
+            pieces[s.leaf].append(
+                (s.start, lax.slice(out, (s.offset,), (s.offset + s.size,))))
+
+
+# ---------------------------------------------------------------------------
+# per-bucket dispatch: split-phase fpisa pipeline / generic strategy call
+# ---------------------------------------------------------------------------
+
+
+def _fpisa_flat_phases(axes, cfg: ar.AggConfig, backend: str):
+    """(encode, collect, finish) for the flat single-level fpisa path —
+    mirrors ``fpisa_allreduce`` exactly (bucket buffers are already block
+    multiples, so its pad step is a no-op here)."""
+    w = ar._axis_size(axes)
+    shift = ar._wire_shift(cfg.fmt, w, cfg.wire_bits)
+
+    def encode(flat):
+        man, bmax = ar._encode_align(flat, axes, shift, cfg, backend)
+        if cfg.wire_bits == 16:
+            man = man.astype(jnp.int16)
+        elif cfg.wire_bits == 8:
+            man = man.astype(jnp.int8)
+        return man, bmax
+
+    def collect(state):
+        man, bmax = state
+        return lax.psum(man, axes), bmax
+
+    def finish(state):
+        man_sum, bmax = state
+        return ar._decode(man_sum, bmax, shift, cfg, backend)
+
+    return encode, collect, finish
+
+
+def _fpisa_hier_phases(data_axis, pod_axis, cfg: ar.AggConfig, backend: str,
+                       stripe: int):
+    """(encode, collect, finish) for the hierarchical fpisa path.
+
+    ``stripe`` rotates the in-pod reduce-scatter shard assignment of this
+    bucket by whole shards (a block-multiple roll): bucket i's cross-pod hop
+    and delayed renorm for any given gradient range land on data-rank
+    (rank + i) % w_data, striping consecutive buckets' DCI traffic across the
+    pod axis's uplinks. Rolling by whole shards keeps every block's contents
+    intact, so the result is bit-identical to the unstriped path.
+    """
+    w_data = compat.axis_size(data_axis)
+    w_pod = compat.axis_size(pod_axis)
+    shift = ar._wire_shift(cfg.fmt, w_data * w_pod, cfg.wire_bits)
+    quantum = cfg.block * w_data
+
+    def encode(flat):
+        pad = (-flat.shape[0]) % quantum
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        roll = (stripe % w_data) * (flat.shape[0] // w_data)
+        if roll:
+            flat = jnp.roll(flat, -roll)
+        man, bmax = ar._encode_align(
+            flat, (data_axis, pod_axis), shift, cfg, backend)
+        return man, bmax, pad, roll
+
+    def collect(state):
+        man, bmax, pad, roll = state
+        man_shard, pod_shift = ar._hier_collect(man, data_axis, pod_axis, cfg, shift)
+        return man_shard, bmax, pod_shift, pad, roll
+
+    def finish(state):
+        man_shard, bmax, pod_shift, pad, roll = state
+        out = ar._hier_finish(man_shard, bmax, shift, pod_shift, data_axis,
+                              cfg, backend)
+        if roll:
+            out = jnp.roll(out, roll)
+        if pad:
+            out = out[:out.shape[0] - pad]
+        return out
+
+    return encode, collect, finish
+
+
+def bucketed_allreduce_tree(tree, axis_names: Sequence[str], cfg: ar.AggConfig):
+    """Aggregate a gradient pytree through fixed-size streamed wire buckets.
+
+    Double-buffered dispatch (fpisa): for each bucket the trace issues
+        encode(i) -> [finish(i-1)] -> collective(i)
+    so the decode of the in-flight bucket and the encode of the next one sit
+    between consecutive collective launches — the transform work of bucket i
+    overlaps the wire time of bucket i-1 under any latency-hiding scheduler.
+    Other strategies (and chunked fpisa) dispatch each bucket through the
+    one-shot ``allreduce`` with the same interleaving.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        return tree
+    axes = tuple(axis_names)
+    inner = dataclasses.replace(cfg, bucket_bytes=0)
+    plan = plan_for_config(leaves, cfg)
+
+    results: dict[int, jax.Array] = {}
+    for i in plan.passthrough:
+        results[i] = ar.allreduce(leaves[i], axes, inner)
+
+    planned = {s.leaf for b in plan.buckets for s in b.segments}
+    flat_leaves = {i: jnp.ravel(leaves[i]) for i in planned}
+
+    hier = cfg.strategy == "fpisa" and len(axes) == 2
+    pipelined = cfg.strategy == "fpisa" and not cfg.chunk_elems
+    backend = ar.resolve_backend(cfg.backend)
+
+    pieces: dict[int, list] = {i: [] for i in flat_leaves}
+    inflight = None  # (bucket, state, finish_fn or None)
+
+    def land(entry):
+        bucket, state, finish = entry
+        out = finish(state) if finish is not None else state
+        unpack_bucket(bucket, out, pieces)
+
+    flat_phases = None
+    for bucket in plan.buckets:
+        buf = pack_bucket(bucket, flat_leaves, _stage_dtype(cfg, bucket.group))
+        if pipelined:
+            if hier:
+                encode, collect, finish = _fpisa_hier_phases(
+                    axes[1], axes[0], cfg, backend, stripe=bucket.index)
+            else:
+                if flat_phases is None:
+                    flat_phases = _fpisa_flat_phases(axes, cfg, backend)
+                encode, collect, finish = flat_phases
+            state = encode(buf)
+            if inflight is not None:
+                land(inflight)
+            inflight = (bucket, collect(state), finish)
+        else:
+            out = ar.allreduce(buf, axes, inner)
+            if inflight is not None:
+                land(inflight)
+            inflight = (bucket, out, None)
+    if inflight is not None:
+        land(inflight)
+
+    for i, leaf in enumerate(leaves):
+        if i in results:
+            continue
+        ps = sorted(pieces[i], key=lambda t: t[0])
+        flat = jnp.concatenate([p for _, p in ps]) if len(ps) > 1 else ps[0][1]
+        results[i] = flat.reshape(leaf.shape).astype(leaf.dtype)
+    return jax.tree_util.tree_unflatten(
+        treedef, [results[i] for i in range(len(leaves))])

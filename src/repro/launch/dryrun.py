@@ -128,7 +128,7 @@ def active_param_count(cfg) -> float:
 def build_cell(arch: str, shape_name: str, mesh, agg_strategy: str = "fpisa",
                overrides: dict | None = None, wire_bits: int = 32,
                pod_wire_bits=None, agg_chunk: int = 0, agg_fmt: str = "fp32",
-               agg_backend: str = "auto"):
+               agg_backend: str = "auto", bucket_bytes: int = 0):
     """Returns (jitted fn, kwargs of ShapeDtypeStructs with shardings)."""
     cfg = get_config(arch)
     if overrides:
@@ -168,7 +168,8 @@ def build_cell(arch: str, shape_name: str, mesh, agg_strategy: str = "fpisa",
         )
         agg = AggConfig(strategy=agg_strategy, wire_bits=wire_bits,
                         pod_wire_bits=pod_wire_bits, chunk_elems=agg_chunk,
-                        fmt_name=agg_fmt, backend=agg_backend)
+                        fmt_name=agg_fmt, backend=agg_backend,
+                        bucket_bytes=bucket_bytes)
         step = make_train_step(model, mesh, agg, opt_cfg, shape.global_batch,
                                accum_steps=cfg.accum_steps)
         # donate params + optimizer state: in-place update, halves peak memory
@@ -193,7 +194,8 @@ def build_cell(arch: str, shape_name: str, mesh, agg_strategy: str = "fpisa",
 def run_cell(arch: str, shape_name: str, multi_pod: bool, agg_strategy: str = "fpisa",
              overrides: dict | None = None, save_hlo: str | None = None,
              wire_bits: int = 32, pod_wire_bits=None, agg_chunk: int = 0,
-             agg_fmt: str = "fp32", agg_backend: str = "auto") -> dict:
+             agg_fmt: str = "fp32", agg_backend: str = "auto",
+             bucket_bytes: int = 0) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     nd = mesh.devices.size
     cfg = get_config(arch)
@@ -215,7 +217,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, agg_strategy: str = "f
         jax.sharding.set_mesh(mesh)  # enables in-model sharding hints
         fn, args = build_cell(arch, shape_name, mesh, agg_strategy, overrides,
                               wire_bits, pod_wire_bits, agg_chunk, agg_fmt,
-                              agg_backend)
+                              agg_backend, bucket_bytes)
         lowered = fn.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -282,6 +284,9 @@ def main():
     ap.add_argument("--agg-fmt", default="fp32")
     ap.add_argument("--agg-backend", default="auto", choices=["auto", "jnp", "pallas"],
                     help="encode/decode transform backend (core/allreduce.py)")
+    ap.add_argument("--bucket-bytes", type=int, default=0,
+                    help="bucketed tree aggregation: wire-bucket size in bytes "
+                         "(core/bucketer.py; 0 = per-leaf)")
     ap.add_argument("--out", default=None, help="append JSON lines here")
     ap.add_argument("--save-hlo", default=None)
     ap.add_argument("--override", action="append", default=[],
@@ -305,7 +310,7 @@ def main():
             rec = run_cell(arch, shape, args.multi_pod, args.agg,
                            overrides or None, args.save_hlo,
                            args.wire_bits, args.pod_wire_bits, args.agg_chunk,
-                           args.agg_fmt, args.agg_backend)
+                           args.agg_fmt, args.agg_backend, args.bucket_bytes)
             line = json.dumps(rec)
             print(line, flush=True)
             if args.out:

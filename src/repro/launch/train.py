@@ -28,7 +28,7 @@ from repro.train.step import make_train_step
 
 def train_loop(cfg, *, steps: int, global_batch: int, seq_len: int,
                agg_strategy: str = "fpisa", agg_backend: str = "auto",
-               agg_chunk: int = 0,
+               agg_chunk: int = 0, agg_bucket_bytes: int = 0,
                ckpt_dir: str | None = None,
                ckpt_every: int = 50, mesh=None, log_every: int = 10,
                opt_overrides: dict | None = None, seed: int = 0):
@@ -67,7 +67,7 @@ def train_loop(cfg, *, steps: int, global_batch: int, seq_len: int,
             print(f"[train] resumed from step {latest}")
 
     agg = AggConfig(strategy=agg_strategy, backend=agg_backend,
-                    chunk_elems=agg_chunk)
+                    chunk_elems=agg_chunk, bucket_bytes=agg_bucket_bytes)
     step_fn = jax.jit(make_train_step(model, mesh, agg, opt_cfg, global_batch))
     loader = ShardedLoader(SyntheticCorpus(cfg.vocab_size, seed), global_batch, seq_len)
     bspec = rules.batch_pspec(mesh, global_batch)
@@ -114,6 +114,11 @@ def main():
     ap.add_argument("--agg-chunk", type=int, default=0,
                     help="stream the aggregation through chunks of this many "
                          "elements (bounds transient plane memory; 0 = off)")
+    ap.add_argument("--bucket-bytes", type=int, default=0,
+                    help="flatten the gradient pytree into fixed-size block-"
+                         "aligned wire buckets dispatched double-buffered "
+                         "(core/bucketer.py; bit-identical to per-leaf; "
+                         "0 = per-leaf tree_map)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     args = ap.parse_args()
@@ -122,6 +127,7 @@ def main():
     train_loop(cfg, steps=args.steps, global_batch=args.global_batch,
                seq_len=args.seq_len, agg_strategy=args.agg,
                agg_backend=args.agg_backend, agg_chunk=args.agg_chunk,
+               agg_bucket_bytes=args.bucket_bytes,
                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
 
 

@@ -22,6 +22,12 @@ in EXPERIMENTS.md).
 
 The optimizer update runs *outside* the shard_map under automatic sharding so
 ZeRO-1 ('data'-sharded m/v) resolves through XLA's partitioner.
+
+Gradient aggregation is per-leaf by default; with ``agg.bucket_bytes`` set
+(the ``--bucket-bytes`` launcher knob) the whole gradient pytree is streamed
+through fixed-size block-aligned wire buckets with double-buffered dispatch
+(core/bucketer.py) — bit-identical results, but the encode/decode overhead is
+paid per bucket instead of per leaf and overlaps the in-flight collective.
 """
 from __future__ import annotations
 
@@ -85,6 +91,7 @@ def make_train_step(model, mesh: Mesh, agg: AggConfig, opt_cfg: optimizers.OptCo
 
         def sharded_grads(params, batch):
             loss, grads = grads_and_loss(params, batch)
+            # per-leaf or bucketed per agg.bucket_bytes (core/bucketer.py)
             grads = allreduce_tree(grads, boundary, agg)
             loss = jax.lax.pmean(loss, boundary)
             return loss, grads

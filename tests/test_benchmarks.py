@@ -1,0 +1,98 @@
+"""Benchmark smoke test (slow): every module in ``benchmarks/run.py`` runs
+end-to-end at tiny size (``BENCH_SMOKE=1``) and every machine-readable
+``BENCH_*.json`` keeps its schema keys stable — the perf-trajectory tooling
+and the CI artifact upload both depend on those keys not drifting.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MODULES = [
+    "tab1_alu_cost",
+    "fig7_gradient_ratio",
+    "fig8_error_dist",
+    "fig9_convergence",
+    "fig10_goodput",
+    "fig11_e2e_speedup",
+    "fig13_queries",
+    "tab3_resource_util",
+    "roofline",
+]
+
+# BENCH_<name>.json -> {top-level results key: [required subkeys]}
+SCHEMAS = {
+    "fig10": {
+        "host_transform": ["switchml_host_transform", "fpisa_host_worstcase",
+                           "fpisa_host_zero_copy"],
+        "dataplane": ["num_workers", "drop_prob", "legacy_pps", "batched_pps",
+                      "speedup", "speedup_target", "speedup_ok",
+                      "bit_identical", "batched", "legacy_stats"],
+    },
+    "fig11": {
+        "link_model": ["MobileNetV2", "GoogleNet", "ResNet-50", "VGG19",
+                       "LSTM", "BERT", "DeepLight"],
+        "bucketing": ["n_leaves", "n_elems", "bucket_bytes", "per_leaf_us",
+                      "bucketed_us", "speedup", "bucketed_le_per_leaf",
+                      "bit_identical"],
+    },
+    "fig13": {
+        "topn": ["switch_s", "baseline_s", "prune_rate", "rows_to_master",
+                 "rows_per_s"],
+        "groupby_sum": ["switch_s", "baseline_s", "max_rel_err",
+                        "rows_to_master", "rows_per_s"],
+        "tpch_q3_like": ["prune_rate"],
+        "tpch_q20_like": ["groups_passing_having"],
+    },
+    "roofline": {
+        "kernels": ["jnp", "two_pass", "fused"],
+        "fused_ge_two_pass": None,
+    },
+}
+
+PROVENANCE_KEYS = {"bench", "jax_backend", "device_count", "host", "results"}
+
+
+@pytest.mark.slow
+def test_benchmark_suite_smoke(tmp_path):
+    env = dict(os.environ)
+    env["BENCH_SMOKE"] = "1"
+    env["BENCH_DIR"] = str(tmp_path)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), REPO, env.get("PYTHONPATH", "")])
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run"], cwd=REPO,
+        capture_output=True, text=True, timeout=3000, env=env)
+    assert res.returncode == 0, res.stderr[-4000:]
+    assert ",ERROR:" not in res.stdout, res.stdout
+
+    # every module ran to completion
+    ok_lines = {line.split(",")[0]: line for line in res.stdout.splitlines()
+                if line.endswith(",ok")}
+    for name in MODULES:
+        assert f"{name}.wall" in ok_lines, (name, res.stdout)
+
+    # every BENCH_*.json landed with a stable schema
+    for bench, spec in SCHEMAS.items():
+        path = tmp_path / f"BENCH_{bench}.json"
+        assert path.exists(), f"{bench} did not write its JSON"
+        doc = json.loads(path.read_text())
+        assert PROVENANCE_KEYS <= set(doc), (bench, sorted(doc))
+        assert doc["bench"] == bench
+        results = doc["results"]
+        for top, subkeys in spec.items():
+            assert top in results, (bench, top, sorted(results))
+            if subkeys:
+                missing = [k for k in subkeys if k not in results[top]]
+                assert not missing, (bench, top, missing)
+
+    # the ISSUE-3 parity bit must hold even at smoke size (timing claims are
+    # asserted only at full size — smoke is too noisy for <= comparisons)
+    fig11 = json.loads((tmp_path / "BENCH_fig11.json").read_text())
+    assert fig11["results"]["bucketing"]["bit_identical"] is True
+    fig10 = json.loads((tmp_path / "BENCH_fig10.json").read_text())
+    assert fig10["results"]["dataplane"]["bit_identical"] is True

@@ -1,0 +1,234 @@
+"""Edge-case coverage for ``switchml_allreduce`` and ``_wire_shift``:
+all-zero blocks, denormal inputs, single-worker (w=1) meshes, and
+wire_bits=8 saturation. The bounds asserted here are the ones documented in
+DESIGN.md §2.
+
+Single-worker cases run in-process (this process keeps 1 device); the
+8-worker cases run on 8 host devices in a subprocess.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import allreduce as AR
+from repro.core import fpisa
+from repro.core import numerics as nx
+
+
+# ---------------------------------------------------------------------------
+# _wire_shift: pure-python invariants
+# ---------------------------------------------------------------------------
+
+WORKER_COUNTS = [1, 2, 3, 4, 7, 8, 9, 16, 64, 100, 1024, 4096]
+
+
+@pytest.mark.parametrize("fmt", list(fpisa.FORMATS.values()), ids=lambda f: f.name)
+def test_wire_shift_single_worker(fmt):
+    # w=1: nothing to sum, so the 32-bit wire needs no pre-shift at all
+    assert AR._wire_shift(fmt, 1, 32) == nx.required_preshift(1, fmt) == 0
+
+
+@pytest.mark.parametrize("fmt", list(fpisa.FORMATS.values()), ids=lambda f: f.name)
+@pytest.mark.parametrize("wire", [8, 16, 32])
+def test_wire_shift_sum_never_overflows(fmt, wire):
+    """The exact saturation invariant: the most extreme aligned mantissa is
+    +-(2^(man_bits+1) - 1); after the arithmetic right shift by t, a sum over
+    w workers must fit the signed wire integer — including the asymmetric
+    negative end, which round-toward--inf pushes one past the positive end
+    (e.g. fp32/w=8/wire=8: +15*8 = 120 vs -16*8 = -128 — exactly int8 min)."""
+    prev = 0
+    max_w = 2 ** 31 if wire >= 32 else 1 << (wire - 1)
+    for w in [v for v in WORKER_COUNTS if v <= max_w]:
+        t = AR._wire_shift(fmt, w, wire)
+        mag = (1 << (fmt.man_bits + 1)) - 1
+        hi = mag >> t                      # arshift of +mag
+        lo = -((mag + (1 << t) - 1) >> t)  # arshift of -mag (floor = -ceil)
+        assert w * hi <= 2 ** (wire - 1) - 1, (w, t)
+        assert w * lo >= -(2 ** (wire - 1)), (w, t)
+        assert t >= prev, "wire shift must be monotone in worker count"
+        prev = t
+
+
+@pytest.mark.parametrize("wire", [8, 16])
+def test_wire_shift_refuses_unrepresentable_worker_counts(wire):
+    """Past w = 2^(wire-1) workers, NO shift is safe: negative mantissas
+    floor at -1 under arithmetic right shift, so a same-signed reduction can
+    reach -w and wrap the wire dtype. _wire_shift must refuse loudly."""
+    edge = 1 << (wire - 1)
+    AR._wire_shift(fpisa.FP32, edge, wire)  # exactly on the rail: allowed
+    with pytest.raises(ValueError, match="cannot carry"):
+        AR._wire_shift(fpisa.FP32, edge + 1, wire)
+    with pytest.raises(ValueError, match="cannot carry"):
+        AR._wire_shift(fpisa.FP32, 1024, 8)
+
+
+@pytest.mark.parametrize("wire", [8, 16, 32])
+def test_wire_capacity_guard_shared_with_pod_hop(wire):
+    """The same rail guards the narrow cross-pod wire (_hier_collect sums
+    w_pod in-pod partials): 2^(wire-1) summands allowed, one more refused,
+    a 32-bit wire unconstrained."""
+    if wire >= 32:
+        AR._check_wire_capacity(1 << 20, wire)  # never refuses
+        return
+    AR._check_wire_capacity(1 << (wire - 1), wire)
+    with pytest.raises(ValueError, match="cannot carry"):
+        AR._check_wire_capacity((1 << (wire - 1)) + 1, wire)
+
+
+def test_wire_shift_matches_documented_bound():
+    # wire >= 32 degenerates to the int32-register preshift
+    for w in WORKER_COUNTS:
+        assert AR._wire_shift(fpisa.FP32, w, 32) == nx.required_preshift(w)
+    # narrower wires: w * 2^(man_bits + 1 - t) <= 2^(wire - 1)  (DESIGN.md §2)
+    for wire in (8, 16):
+        for w in [v for v in WORKER_COUNTS if v <= 1 << (wire - 1)]:
+            t = AR._wire_shift(fpisa.FP32, w, wire)
+            assert w * 2.0 ** (fpisa.FP32.man_bits + 1 - t) <= 2.0 ** (wire - 1)
+
+
+# ---------------------------------------------------------------------------
+# single-worker (w=1) aggregation edge cases, in-process
+# ---------------------------------------------------------------------------
+
+
+def _run_w1(x: np.ndarray, cfg: AR.AggConfig) -> np.ndarray:
+    mesh = compat.make_mesh((1,), ("data",))
+    fn = jax.jit(compat.shard_map(
+        lambda v: AR.allreduce(v, ("data",), cfg), mesh=mesh,
+        in_specs=P(), out_specs=P(), check_vma=False))
+    return np.asarray(fn(jnp.asarray(x)))
+
+
+def test_switchml_single_worker_is_quantized_identity():
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal(2048) * 0.01).astype(np.float32)
+    out = _run_w1(x, AR.AggConfig(strategy="switchml"))
+    # w=1, s=0: quantization to man_bits at the block max — tiny relative err
+    np.testing.assert_allclose(out, x, rtol=0, atol=np.abs(x).max() * 2.0 ** -23)
+
+
+def test_switchml_all_zero_blocks_exact_zero():
+    out = _run_w1(np.zeros(1024, np.float32), AR.AggConfig(strategy="switchml"))
+    assert not out.any() and not np.signbit(out).any()
+
+
+def test_switchml_denormals_flush_to_zero():
+    # denormals carry biased exponent 0: the block max-exponent is 0, there
+    # is no finite scale, and SwitchML's fixed-point grid has no cell for
+    # them — they must quantize to exactly 0, never NaN/garbage
+    x = np.full(1024, 1e-42, np.float32)  # subnormal
+    out = _run_w1(x, AR.AggConfig(strategy="switchml"))
+    assert not out.any()
+    assert np.isfinite(out).all()
+
+
+def test_switchml_tiny_normal_blocks_survive():
+    """Regression: blocks whose max is a small normal used to hit an inf
+    scale factor (2^k with k up to ~150 overflows float32) and flush the
+    whole block to zero through inf/NaN laundering. With the split-exp2
+    scaling they quantize normally."""
+    x = np.full(512, np.float32(1.5 * 2.0 ** -126))
+    out = _run_w1(x, AR.AggConfig(strategy="switchml"))
+    # 1.5 * 2^-126 sits exactly on the fixed-point grid: roundtrip is exact
+    np.testing.assert_array_equal(out, x)
+
+
+def test_switchml_mixed_zero_and_live_blocks():
+    x = np.zeros(1024, np.float32)
+    x[512:] = 0.25  # second block live, first block all-zero
+    out = _run_w1(x, AR.AggConfig(strategy="switchml", block=512))
+    assert not out[:512].any()
+    np.testing.assert_array_equal(out[512:], x[512:])
+
+
+def test_fpisa_single_worker_wire8_roundtrip():
+    # w=1 with an 8-bit wire: the whole mantissa is truncated to fit 8 bits;
+    # the error bound of DESIGN.md §2 still must hold elementwise
+    rng = np.random.default_rng(1)
+    x = (rng.standard_normal(2048) * 0.01).astype(np.float32)
+    cfg = AR.AggConfig(strategy="fpisa", wire_bits=8)
+    out = _run_w1(x, cfg)
+    t = AR._wire_shift(fpisa.FP32, 1, 8)
+    blocks = x.reshape(-1, cfg.block)
+    bmax = np.frexp(np.abs(blocks).max(axis=1))[1] + 126  # biased exp of max
+    ulp = 2.0 ** (bmax.astype(np.float64) - 127 - 23 + t)
+    err = np.abs(out.reshape(-1, cfg.block).astype(np.float64) - blocks)
+    assert (err <= 2 * ulp[:, None]).all()
+
+
+# ---------------------------------------------------------------------------
+# 8-worker edge cases (subprocess)
+# ---------------------------------------------------------------------------
+
+EDGE_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.core import allreduce as AR
+from repro.core import fpisa
+
+W = 8
+mesh = compat.make_mesh((W,), ("data",))
+
+def run(cfg, x):
+    fn = jax.jit(compat.shard_map(lambda xs: AR.allreduce(xs[0], ("data",), cfg),
+                                  mesh=mesh, in_specs=P("data"), out_specs=P(),
+                                  check_vma=False))
+    return np.asarray(fn(x.reshape(W, 1, -1))).reshape(-1)
+
+# --- switchml: all-zero and denormal gradients aggregate to exact zero
+for name, x in [("zeros", np.zeros((W, 2048), np.float32)),
+                ("denormal", np.full((W, 2048), 1e-42, np.float32))]:
+    out = run(AR.AggConfig(strategy="switchml"), x)
+    assert np.isfinite(out).all(), name
+    assert not out.any(), name
+
+# --- switchml: mixed blocks — zero blocks stay zero, live blocks exact
+x = np.zeros((W, 2048), np.float32)
+x[:, 1024:] = 0.125
+out = run(AR.AggConfig(strategy="switchml"), x)
+assert not out[:1024].any()
+np.testing.assert_array_equal(out[1024:], np.float32(W * 0.125))
+
+# --- fpisa wire_bits=8 saturation: every worker contributes the most
+# extreme representable mantissa, all the same sign — the wire-dtype sum
+# lands exactly on the int8 rails without wrapping (DESIGN.md §2)
+for sign in (+1.0, -1.0):
+    big = np.float32(sign * (2.0 - 2.0 ** -23))  # mantissa 2^24 - 1
+    x = np.full((W, 2048), big, np.float32)
+    cfg = AR.AggConfig(strategy="fpisa", wire_bits=8)
+    out = run(cfg, x)
+    assert np.isfinite(out).all(), sign
+    assert (np.sign(out) == sign).all(), "saturation must never flip sign"
+    t = AR._wire_shift(fpisa.FP32, W, 8)
+    ulp = 2.0 ** (127 - 127 - 23 + t)  # value of one truncated wire unit
+    err = np.abs(out.astype(np.float64) - W * float(big))
+    assert (err <= (W + 1) * ulp).all(), err.max()
+
+# --- fpisa wire8, cancelling signs: the float sum is 0, but the floor
+# (round-toward--inf) pre-shift is sign-asymmetric (+big -> 15 wire units,
+# -big -> -16), so the integer sum is a small negative residual — bounded by
+# one truncated wire unit per worker, NOT a wrapped garbage value
+x = np.empty((W, 2048), np.float32)
+x[0::2] = 2.0 - 2.0 ** -23
+x[1::2] = -(2.0 - 2.0 ** -23)
+out = run(AR.AggConfig(strategy="fpisa", wire_bits=8), x)
+t = AR._wire_shift(fpisa.FP32, W, 8)
+assert (np.abs(out) <= W * 2.0 ** (-23 + t)).all(), out
+
+# --- all-zero + denormal through fpisa wire8 (bmax==0 everywhere)
+for x in [np.zeros((W, 2048), np.float32),
+          np.full((W, 2048), 1e-42, np.float32)]:
+    out = run(AR.AggConfig(strategy="fpisa", wire_bits=8), x)
+    assert not out.any()
+print("WIRE_EDGE_OK")
+"""
+
+
+def test_edge_cases_multi_worker(multi_device_runner):
+    out = multi_device_runner(EDGE_CODE, n_devices=8, timeout=600)
+    assert "WIRE_EDGE_OK" in out
