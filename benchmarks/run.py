@@ -15,6 +15,7 @@ MODULES = [
     "fig10_goodput",
     "fig11_e2e_speedup",
     "fig13_queries",
+    "fig_recovery",
     "tab3_resource_util",
     "roofline",
 ]

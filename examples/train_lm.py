@@ -29,7 +29,20 @@ def main():
                     help="stream the gradient pytree through fixed-size "
                          "block-aligned wire buckets (core/bucketer.py; "
                          "bit-identical to per-leaf; 0 = per-leaf)")
-    ap.add_argument("--ckpt-dir", default="/tmp/fpisa_train_lm")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="default /tmp/fpisa_train_lm (normal path) or "
+                         "/tmp/fpisa_train_lm_fault (--fault-plan path: the "
+                         "elastic controller resets its checkpoint dir at "
+                         "start, so the two paths must not share one)")
+    ap.add_argument("--fault-plan", default="",
+                    help="inject failures and recover elastically, e.g. "
+                         "'kill:2@40' kills host 2 at step 40: the elastic "
+                         "controller reclaims its switch slots, re-meshes the "
+                         "survivors and resumes bit-identically "
+                         "(repro/runtime/controller.py)")
+    ap.add_argument("--num-hosts", type=int, default=None,
+                    help="logical worker count for the controller path "
+                         "(default: one per device)")
     args = ap.parse_args()
 
     # ~100M-param qwen-family config (20 layers x 640 wide, 32k vocab)
@@ -39,11 +52,29 @@ def main():
         param_dtype="float32", activation_dtype="float32",
         attn_q_chunk=256, learning_rate=3e-4,
     )
+    if args.fault_plan or args.num_hosts:
+        if args.agg_chunk:
+            ap.error("--agg-chunk is not supported on the elastic controller "
+                     "path (stacked aggregation; use --bucket-bytes instead)")
+        from repro.runtime.controller import run_controller
+
+        summary = run_controller(
+            cfg, steps=args.steps, global_batch=8, seq_len=256,
+            agg_strategy=args.agg, agg_backend=args.agg_backend,
+            agg_bucket_bytes=args.bucket_bytes, num_hosts=args.num_hosts,
+            ckpt_dir=args.ckpt_dir or "/tmp/fpisa_train_lm_fault",
+            fault_plan=args.fault_plan)
+        hist = summary["history"]
+        print(f"final loss {hist[-1]:.4f} (from {hist[0]:.4f}); "
+              f"{len(summary['recoveries'])} recoveries, "
+              f"switch slots reclaimed: "
+              f"{sum(r['reclaimed'] for r in summary['recoveries'])}")
+        return
     params, opt, hist = train_loop(
         cfg, steps=args.steps, global_batch=8, seq_len=256,
         agg_strategy=args.agg, agg_backend=args.agg_backend,
         agg_chunk=args.agg_chunk, agg_bucket_bytes=args.bucket_bytes,
-        ckpt_dir=args.ckpt_dir, ckpt_every=50,
+        ckpt_dir=args.ckpt_dir or "/tmp/fpisa_train_lm", ckpt_every=50,
         log_every=10,
     )
     print(f"final loss {hist[-1]:.4f} (from {hist[0]:.4f}); "

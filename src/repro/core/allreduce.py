@@ -296,6 +296,16 @@ def _wire_shift(fmt: fpisa.FpFormat, w: int, wire_bits: int) -> int:
 _PACKED = {"fp32": jnp.float32, "fp16": jnp.float16, "bf16": jnp.bfloat16}
 
 
+def _wire_cast(man: jax.Array, wire_bits: int) -> jax.Array:
+    """Cast a mantissa plane to the wire element dtype (lossless: the wire
+    shift guarantees every value — and every partial sum — fits)."""
+    if wire_bits == 16:
+        return man.astype(jnp.int16)
+    if wire_bits == 8:
+        return man.astype(jnp.int8)
+    return man
+
+
 def fpisa_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
     """The paper's aggregation mapped to TPU collectives (see module doc).
 
@@ -315,10 +325,7 @@ def fpisa_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
     # int8 on real hardware). Unlike SwitchML this is NOT a host round trip;
     # it pipelines with the mantissa pass chunk-by-chunk.
     man, bmax = _encode_align(flat, axes, shift, cfg, backend)
-    if cfg.wire_bits == 16:
-        man = man.astype(jnp.int16)
-    elif cfg.wire_bits == 8:
-        man = man.astype(jnp.int8)
+    man = _wire_cast(man, cfg.wire_bits)
     man_sum = lax.psum(man, axes)
     out = _decode(man_sum, bmax, shift, cfg, backend)
     return _unflatten(out, pad, orig_shape, orig_dtype)
@@ -456,6 +463,203 @@ STRATEGIES = {
     "fpisa_seq": fpisa_seq_allreduce,
     "switch_emu": switch_emu_allreduce,
 }
+
+
+# ---------------------------------------------------------------------------
+# stacked (logical-worker) aggregation — elastic fault tolerance (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+#
+# ``stacked_*`` variants reduce over a LEADING logical-worker axis as well as
+# the mesh axes: x has shape (k, ...) where this shard hosts k of the job's
+# W = k * mesh_size logical workers. The reduction over logical workers runs
+# entirely in the integer domain (mantissa planes for fpisa, fixed-point for
+# switchml, arrival-ordered planes for fpisa_seq/switch_emu), and the wire
+# shift is derived from W — NOT the mesh size — so the aggregated bits are
+# IDENTICAL for any distribution of the W workers over any mesh. That is the
+# property elastic recovery rests on: after a host death the survivors re-mesh
+# with k' > k workers per shard and the training trajectory continues bit-for-
+# bit (runtime/controller.py, tests/test_recovery.py). ``native`` is provided
+# for completeness but sums in float, which is grouping-sensitive — it does
+# not carry the bit-identity guarantee.
+
+
+def _stacked_rows(x: jax.Array, dtype) -> jax.Array:
+    if x.ndim < 1:
+        raise ValueError("stacked aggregation needs a leading worker axis")
+    return x.reshape(x.shape[0], -1).astype(dtype)
+
+
+def _encode_align_stacked(rows: jax.Array, axes, shift: int, cfg: AggConfig,
+                          backend: str):
+    """rows (k, Nb) packed FP -> (man (k, Nb) int32 aligned to the block
+    exponent maxed across ALL W logical workers, bmax (Nb/block,) int32).
+
+    The block max folds the local worker axis with ``jnp.max`` before the
+    cross-shard ``pmax`` — max is associative, so the agreed exponent (and
+    with it every aligned mantissa) is independent of the worker placement."""
+    k, nb_elems = rows.shape
+    nblocks = nb_elems // cfg.block
+    if backend == "pallas":
+        man_local, local_bmax = fpisa_fused.fused_encode_align(
+            rows.reshape(-1, cfg.block), fmt_name=cfg.fmt_name,
+            interpret=_interpret())
+        local_bmax = local_bmax.reshape(k, nblocks)
+        bmax = lax.pmax(jnp.max(local_bmax, axis=0), axes)
+        man = nx.arshift(man_local.reshape(k, nblocks, cfg.block),
+                         (bmax[None, :] - local_bmax)[:, :, None] + shift)
+        return man.reshape(k, nb_elems), bmax
+    planes = fpisa.encode(rows, cfg.fmt)
+    local_bmax = fpisa.block_max_exponent(planes.exp, cfg.block)  # (k, nblocks)
+    bmax = lax.pmax(jnp.max(local_bmax, axis=0), axes)
+    be = jnp.repeat(bmax, cfg.block)[None, :]
+    man = nx.arshift(planes.man, (be - planes.exp) + shift)
+    return man, bmax
+
+
+def _stacked_pad(rows: jax.Array, quantum: int):
+    pad = (-rows.shape[1]) % quantum
+    if pad:
+        rows = jnp.pad(rows, ((0, 0), (0, pad)))
+    return rows, pad
+
+
+def stacked_native_allreduce(x, axis_names: Sequence[str], cfg: AggConfig):
+    return lax.psum(jnp.sum(x, axis=0), tuple(axis_names))
+
+
+def stacked_fpisa_allreduce(x, axis_names: Sequence[str], cfg: AggConfig):
+    """FPISA aggregation over (leading logical-worker axis) + mesh axes.
+
+    Each logical worker's mantissas are individually wire-cast (its packet
+    payload), summed over the local workers in int32 — exact, every partial
+    fits the wire dtype by the W-derived shift — then psum'd across shards.
+    Integer addition is associative + commutative, so the result is bit-
+    identical for every placement of the W workers. A 2-axis (pod, data) mesh
+    is reduced jointly (flat): hierarchical striping is a routing choice and
+    the flat integer sum is bit-identical to it at equal W."""
+    axes = tuple(axis_names)
+    k = x.shape[0]
+    w = k * _axis_size(axes)
+    backend = resolve_backend(cfg.backend)
+    orig_shape, orig_dtype = x.shape[1:], x.dtype
+    rows, pad = _stacked_pad(_stacked_rows(x, _PACKED[cfg.fmt_name]), cfg.block)
+
+    shift = _wire_shift(cfg.fmt, w, cfg.wire_bits)
+    man, bmax = _encode_align_stacked(rows, axes, shift, cfg, backend)
+    man = _wire_cast(man, cfg.wire_bits)  # per-worker wire payloads
+    local = _wire_cast(jnp.sum(man.astype(jnp.int32), axis=0), cfg.wire_bits)
+    man_sum = lax.psum(local, axes)
+    out = _decode(man_sum, bmax, shift, cfg, backend)
+    return _unflatten(out, pad, orig_shape, orig_dtype)
+
+
+def stacked_switchml_allreduce(x, axis_names: Sequence[str], cfg: AggConfig):
+    """SwitchML fixed-point aggregation with W logical workers (see
+    ``switchml_allreduce`` for the scale-factor mechanics): per-worker
+    quantization, exact int32 local fold, int psum — same invariance
+    argument as ``stacked_fpisa_allreduce``."""
+    axes = tuple(axis_names)
+    k = x.shape[0]
+    w = k * _axis_size(axes)
+    fmt = cfg.fmt
+    orig_shape, orig_dtype = x.shape[1:], x.dtype
+    rows, pad = _stacked_pad(_stacked_rows(x, jnp.float32), cfg.block)
+
+    planes = fpisa.encode(rows, fmt)
+    local_bmax = fpisa.block_max_exponent(planes.exp, cfg.block)
+    bmax = lax.pmax(jnp.max(local_bmax, axis=0), axes)
+
+    s = nx.required_preshift(w, fmt)
+    be = jnp.repeat(bmax, cfg.block)  # (Nb,)
+    kexp = (fmt.man_bits - s) - (be - fmt.bias)
+    k1 = kexp // 2
+    k2 = kexp - k1
+    live = be > 0
+    q = jnp.where(live[None, :],
+                  jnp.round((rows * _pow2(k1)[None, :]) * _pow2(k2)[None, :]),
+                  0.0).astype(jnp.int32)
+    qsum = lax.psum(jnp.sum(q, axis=0), axes)
+    out = jnp.where(
+        live, (qsum.astype(jnp.float32) * _pow2(-k1)) * _pow2(-k2), 0.0)
+    return _unflatten(out, pad, orig_shape, orig_dtype)
+
+
+def _gather_logical(x, axes):
+    """(k, ...) per-shard stacks -> (W, N) rows in logical-worker order.
+
+    Logical workers are assigned to shards contiguously (shard d hosts
+    workers [d*k, (d+1)*k)), so the device-major all_gather concatenation IS
+    the logical order — on every mesh size."""
+    k = x.shape[0]
+    rows = x.astype(jnp.float32).reshape(k, -1)
+    return lax.all_gather(rows, axes).reshape(-1, rows.shape[-1])
+
+
+def stacked_fpisa_seq_allreduce(x, axis_names: Sequence[str], cfg: AggConfig):
+    stacked = _gather_logical(x, tuple(axis_names))
+    out = fpisa.fpisa_sum_sequential(stacked, cfg.fmt, variant="fpisa_a")
+    return out.reshape(x.shape[1:]).astype(x.dtype)
+
+
+def stacked_switch_emu_allreduce(x, axis_names: Sequence[str], cfg: AggConfig):
+    """Validation strategy with W logical switch ports: the gathered per-
+    worker gradients stream through the numpy dataplane exactly as in
+    ``switch_emu_allreduce`` — arrival order is logical-worker-major, i.e.
+    identical on every mesh, so kill-and-resume trajectories stay bit-exact
+    even under the full protocol emulation."""
+    if cfg.fmt_name != "fp32":
+        raise ValueError(
+            "switch_emu runs on the jax-free numpy dataplane, which is "
+            f"fp32-only; got fmt_name={cfg.fmt_name!r}")
+    axes = tuple(axis_names)
+    w = x.shape[0] * _axis_size(axes)
+    n = math.prod(x.shape[1:]) if x.ndim > 1 else 1
+    stacked = _gather_logical(x, axes)
+
+    def host(vals):
+        from repro import switchsim
+
+        dp = switchsim.NumpyDataplane(switchsim.DataplaneConfig(
+            num_workers=w, fmt_name="fp32", variant="fpisa_a"))
+        return switchsim.run_aggregation(dp, np.asarray(vals)).astype(np.float32)
+
+    out = jax.pure_callback(
+        host, jax.ShapeDtypeStruct((n,), jnp.float32), stacked)
+    return out.reshape(x.shape[1:]).astype(x.dtype)
+
+
+STACKED_STRATEGIES = {
+    "native": stacked_native_allreduce,
+    "switchml": stacked_switchml_allreduce,
+    "fpisa": stacked_fpisa_allreduce,
+    "fpisa_seq": stacked_fpisa_seq_allreduce,
+    "switch_emu": stacked_switch_emu_allreduce,
+}
+
+
+def stacked_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
+    """Aggregate ``x`` (leading logical-worker axis, see section doc) over
+    that axis AND the named mesh axes."""
+    if cfg.chunk_elems:
+        raise NotImplementedError(
+            "chunk_elems is not supported with stacked (logical-worker) "
+            "aggregation; use bucket_bytes to bound transient memory instead")
+    return STACKED_STRATEGIES[cfg.strategy](x, tuple(axis_names), cfg)
+
+
+def stacked_allreduce_tree(tree, axis_names: Sequence[str], cfg: AggConfig):
+    """``allreduce_tree`` for per-logical-worker gradient stacks.
+
+    With ``cfg.bucket_bytes`` the pytree streams through the same block-
+    aligned wire buckets as the per-leaf path (core/bucketer.py) — the plan is
+    derived from the traced per-worker leaf shapes and the CURRENT mesh, so a
+    post-failure re-trace on the survivor mesh re-plans automatically."""
+    if cfg.bucket_bytes:
+        from repro.core import bucketer
+
+        return bucketer.bucketed_stacked_allreduce_tree(tree, axis_names, cfg)
+    return jax.tree_util.tree_map(
+        lambda g: stacked_allreduce(g, axis_names, cfg), tree)
 
 
 def allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):

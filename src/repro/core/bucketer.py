@@ -261,17 +261,62 @@ def _fpisa_hier_phases(data_axis, pod_axis, cfg: ar.AggConfig, backend: str,
     return encode, collect, finish
 
 
-def bucketed_allreduce_tree(tree, axis_names: Sequence[str], cfg: ar.AggConfig):
-    """Aggregate a gradient pytree through fixed-size streamed wire buckets.
-
-    Double-buffered dispatch (fpisa): for each bucket the trace issues
+def _stream_buckets(plan: BucketPlan, flat_leaves: dict, cfg: ar.AggConfig,
+                    pack_fn, phases_for, generic_fn) -> dict:
+    """Double-buffered dispatch shared by the per-leaf and stacked tree
+    entries: for each bucket the trace issues
         encode(i) -> [finish(i-1)] -> collective(i)
     so the decode of the in-flight bucket and the encode of the next one sit
     between consecutive collective launches — the transform work of bucket i
     overlaps the wire time of bucket i-1 under any latency-hiding scheduler.
-    Other strategies (and chunked fpisa) dispatch each bucket through the
-    one-shot ``allreduce`` with the same interleaving.
-    """
+
+    ``pack_fn(bucket, stage_dtype)`` assembles the wire buffer;
+    ``phases_for(bucket)`` returns (encode, collect, finish) for split-phase
+    pipelined strategies or None to dispatch through the one-shot
+    ``generic_fn(buffer)`` with the same interleaving. Returns the
+    {leaf index: [(start, aggregated piece), ...]} map."""
+    pieces: dict[int, list] = {i: [] for i in flat_leaves}
+    inflight = None  # (bucket, state, finish_fn or None)
+
+    def land(entry):
+        bucket, state, finish = entry
+        out = finish(state) if finish is not None else state
+        unpack_bucket(bucket, out, pieces)
+
+    for bucket in plan.buckets:
+        buf = pack_fn(bucket, _stage_dtype(cfg, bucket.group))
+        phases = phases_for(bucket)
+        if phases is not None:
+            encode, collect, finish = phases
+            state = encode(buf)
+            if inflight is not None:
+                land(inflight)
+            inflight = (bucket, collect(state), finish)
+        else:
+            out = generic_fn(buf)
+            if inflight is not None:
+                land(inflight)
+            inflight = (bucket, out, None)
+    if inflight is not None:
+        land(inflight)
+    return pieces
+
+
+def _reassemble(leaves, treedef, results: dict, pieces: dict, shape_of):
+    for i, leaf in enumerate(leaves):
+        if i in results:
+            continue
+        ps = sorted(pieces[i], key=lambda t: t[0])
+        flat = jnp.concatenate([p for _, p in ps]) if len(ps) > 1 else ps[0][1]
+        results[i] = flat.reshape(shape_of(leaf)).astype(leaf.dtype)
+    return jax.tree_util.tree_unflatten(
+        treedef, [results[i] for i in range(len(leaves))])
+
+
+def bucketed_allreduce_tree(tree, axis_names: Sequence[str], cfg: ar.AggConfig):
+    """Aggregate a gradient pytree through fixed-size streamed wire buckets
+    with double-buffered dispatch (``_stream_buckets``); non-pipelined
+    strategies (and chunked fpisa) go through the one-shot ``allreduce``."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     if not leaves:
         return tree
@@ -289,43 +334,102 @@ def bucketed_allreduce_tree(tree, axis_names: Sequence[str], cfg: ar.AggConfig):
     hier = cfg.strategy == "fpisa" and len(axes) == 2
     pipelined = cfg.strategy == "fpisa" and not cfg.chunk_elems
     backend = ar.resolve_backend(cfg.backend)
-
-    pieces: dict[int, list] = {i: [] for i in flat_leaves}
-    inflight = None  # (bucket, state, finish_fn or None)
-
-    def land(entry):
-        bucket, state, finish = entry
-        out = finish(state) if finish is not None else state
-        unpack_bucket(bucket, out, pieces)
-
     flat_phases = None
-    for bucket in plan.buckets:
-        buf = pack_bucket(bucket, flat_leaves, _stage_dtype(cfg, bucket.group))
-        if pipelined:
-            if hier:
-                encode, collect, finish = _fpisa_hier_phases(
-                    axes[1], axes[0], cfg, backend, stripe=bucket.index)
-            else:
-                if flat_phases is None:
-                    flat_phases = _fpisa_flat_phases(axes, cfg, backend)
-                encode, collect, finish = flat_phases
-            state = encode(buf)
-            if inflight is not None:
-                land(inflight)
-            inflight = (bucket, collect(state), finish)
-        else:
-            out = ar.allreduce(buf, axes, inner)
-            if inflight is not None:
-                land(inflight)
-            inflight = (bucket, out, None)
-    if inflight is not None:
-        land(inflight)
 
-    for i, leaf in enumerate(leaves):
-        if i in results:
-            continue
-        ps = sorted(pieces[i], key=lambda t: t[0])
-        flat = jnp.concatenate([p for _, p in ps]) if len(ps) > 1 else ps[0][1]
-        results[i] = flat.reshape(leaf.shape).astype(leaf.dtype)
-    return jax.tree_util.tree_unflatten(
-        treedef, [results[i] for i in range(len(leaves))])
+    def phases_for(bucket):
+        nonlocal flat_phases
+        if not pipelined:
+            return None
+        if hier:
+            return _fpisa_hier_phases(axes[1], axes[0], cfg, backend,
+                                      stripe=bucket.index)
+        if flat_phases is None:
+            flat_phases = _fpisa_flat_phases(axes, cfg, backend)
+        return flat_phases
+
+    pieces = _stream_buckets(
+        plan, flat_leaves, cfg,
+        lambda bucket, dt: pack_bucket(bucket, flat_leaves, dt),
+        phases_for,
+        lambda buf: ar.allreduce(buf, axes, inner))
+    return _reassemble(leaves, treedef, results, pieces, lambda l: l.shape)
+
+
+# ---------------------------------------------------------------------------
+# stacked (logical-worker) bucketed dispatch — elastic recovery (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def _fpisa_stacked_phases(axes, cfg: ar.AggConfig, backend: str, k: int):
+    """(encode, collect, finish) for the stacked flat fpisa path — mirrors
+    ``stacked_fpisa_allreduce``: per-worker encode + exact local int fold
+    before the wire, W-derived shift, one delayed renorm after the psum."""
+    w = k * ar._axis_size(axes)
+    shift = ar._wire_shift(cfg.fmt, w, cfg.wire_bits)
+
+    def encode(buf):  # (k, elems) packed FP
+        man, bmax = ar._encode_align_stacked(buf, axes, shift, cfg, backend)
+        man = ar._wire_cast(man, cfg.wire_bits)
+        local = ar._wire_cast(jnp.sum(man.astype(jnp.int32), axis=0),
+                              cfg.wire_bits)
+        return local, bmax
+
+    def collect(state):
+        man, bmax = state
+        return lax.psum(man, axes), bmax
+
+    def finish(state):
+        man_sum, bmax = state
+        return ar._decode(man_sum, bmax, shift, cfg, backend)
+
+    return encode, collect, finish
+
+
+def bucketed_stacked_allreduce_tree(tree, axis_names: Sequence[str],
+                                    cfg: ar.AggConfig):
+    """``bucketed_allreduce_tree`` for per-logical-worker gradient stacks:
+    every leaf carries a leading worker axis of size k and the reduction runs
+    over that axis plus the mesh axes (core/allreduce.py stacked section).
+
+    The plan is built from the PER-WORKER leaf shapes (leading axis dropped),
+    so the wire layout — block alignment, bucket cuts, dispatch order — is
+    identical to the unstacked plan of the same pytree, and identical across
+    meshes: re-tracing on a survivor mesh after a failure re-plans for the
+    new k without changing a single block boundary. Packing vmaps the same
+    ``pack_bucket`` over the worker axis; aggregated buckets come back
+    reduced (1-D) and unpack through the unchanged ``unpack_bucket``."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        return tree
+    axes = tuple(axis_names)
+    k = leaves[0].shape[0]
+    inner = dataclasses.replace(cfg, bucket_bytes=0)
+    per_worker = [jax.ShapeDtypeStruct(l.shape[1:], l.dtype) for l in leaves]
+    plan = plan_for_config(per_worker, cfg)
+
+    results: dict[int, jax.Array] = {}
+    for i in plan.passthrough:
+        results[i] = ar.stacked_allreduce(leaves[i], axes, inner)
+
+    planned = {s.leaf for b in plan.buckets for s in b.segments}
+    flat_leaves = {i: leaves[i].reshape(k, -1) for i in planned}
+
+    pipelined = cfg.strategy == "fpisa"
+    backend = ar.resolve_backend(cfg.backend)
+    phases = None
+
+    def phases_for(bucket):
+        nonlocal phases
+        if not pipelined:
+            return None
+        if phases is None:
+            phases = _fpisa_stacked_phases(axes, cfg, backend, k)
+        return phases
+
+    pieces = _stream_buckets(
+        plan, flat_leaves, cfg,
+        lambda bucket, dt: jax.vmap(
+            lambda fl: pack_bucket(bucket, fl, dt))(flat_leaves),
+        phases_for,
+        lambda buf: ar.stacked_allreduce(buf, axes, inner))
+    return _reassemble(leaves, treedef, results, pieces, lambda l: l.shape[1:])

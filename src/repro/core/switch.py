@@ -76,7 +76,13 @@ class FpisaSwitch:
     def stats(self) -> dict:
         s = self._dp.stats
         return {k: s[k] for k in ("packets", "duplicates", "stale",
-                                  "overwrite", "overflow")}
+                                  "overwrite", "overflow", "reclaimed")}
+
+    def reclaim_worker(self, worker: int):
+        """Dead-worker reclamation (control plane): free the worker's parked
+        in-flight slots and waive its bitmap bit for future completions —
+        see repro/switchsim/dataplane.py \"Worker-failure reclamation\"."""
+        self._dp.reclaim_worker(worker)
 
     def ingest(self, pkt: Packet) -> ResultPacket | None:
         """Process one packet; returns the broadcast result when a slot fills,

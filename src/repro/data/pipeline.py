@@ -53,6 +53,22 @@ class ShardedLoader:
         self.num_shards = num_shards
         self.prefetch = prefetch
 
+    @property
+    def global_batch(self) -> int:
+        return self.local_batch * self.num_shards
+
+    def with_shard(self, new_shard_id: int) -> "ShardedLoader":
+        """The same stream addressed at a different shard — the failover
+        primitive: a replacement host regenerates the dead host's batches
+        bit-for-bit (runtime/controller.py re-derives shard ownership from
+        HealthMonitor.reassignments with this every step)."""
+        if not 0 <= new_shard_id < self.num_shards:
+            raise ValueError(f"shard {new_shard_id} out of range "
+                             f"[0, {self.num_shards})")
+        return ShardedLoader(self.corpus, self.global_batch, self.seq_len,
+                             shard_id=new_shard_id, num_shards=self.num_shards,
+                             prefetch=self.prefetch)
+
     def batch_at(self, step: int) -> dict:
         toks = self.corpus.batch(step, self.shard_id, self.local_batch, self.seq_len)
         return {"tokens": toks}
@@ -78,8 +94,6 @@ class ShardedLoader:
 
 def reassign_shard(loader: ShardedLoader, new_shard_id: int) -> ShardedLoader:
     """Deterministic failover: a replacement host resumes the dead host's
-    stream bit-for-bit (tested in tests/test_runtime.py)."""
-    return ShardedLoader(
-        loader.corpus, loader.local_batch * loader.num_shards, loader.seq_len,
-        shard_id=new_shard_id, num_shards=loader.num_shards, prefetch=loader.prefetch,
-    )
+    stream bit-for-bit (tested in tests/test_runtime.py and, end to end with
+    revival retraction, tests/test_recovery.py)."""
+    return loader.with_shard(new_shard_id)

@@ -55,9 +55,18 @@ def train_loop(cfg, *, steps: int, global_batch: int, seq_len: int,
         saver = ckpt.AsyncCheckpointer(ckpt_dir)
         latest = ckpt.latest_step(ckpt_dir)
         if latest is not None:
-            host_params, extra = ckpt.restore(ckpt_dir, latest, params)
+            try:
+                # atomic bundle: params + opt always come from the SAME step
+                trees, extra = ckpt.restore_bundle(
+                    ckpt_dir, latest, {"params": params, "opt": opt_state})
+                host_params, host_opt = trees["params"], trees["opt"]
+            except ValueError:
+                # pre-bundle layout (params at <dir>, opt at <dir>_opt) from
+                # an older run — restore it once; the next save commits a
+                # bundle and the split dirs stop mattering
+                host_params, extra = ckpt.restore(ckpt_dir, latest, params)
+                host_opt, _ = ckpt.restore(ckpt_dir + "_opt", latest, opt_state)
             params = jax.device_put(host_params, rules.named(mesh, pspecs))
-            host_opt, _ = ckpt.restore(ckpt_dir + "_opt", latest, opt_state)
             opt_state = optimizers.OptState(
                 step=jax.device_put(host_opt.step, NamedSharding(mesh, P())),
                 m=jax.device_put(host_opt.m, rules.named(mesh, ospecs)),
@@ -90,8 +99,8 @@ def train_loop(cfg, *, steps: int, global_batch: int, seq_len: int,
             print(f"[train] step {step:5d} loss {loss:.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} {tok_s:,.0f} tok/s")
         if saver and step > 0 and step % ckpt_every == 0:
-            saver.save(step, params, {"loss": loss})
-            ckpt.save(ckpt_dir + "_opt", step, jax.device_get(opt_state))
+            saver.save_bundle(step, {"params": params, "opt": opt_state},
+                              {"loss": loss})
     if saver:
         saver.wait()
     return params, opt_state, history
@@ -121,9 +130,33 @@ def main():
                          "0 = per-leaf tree_map)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fault-plan", default="",
+                    help="fault-injection spec, e.g. 'kill:2@5' or "
+                         "'kill:2@5,revive:2@20,slow:3@4x6' — routes the run "
+                         "through the elastic controller "
+                         "(repro/runtime/controller.py): heartbeats, switch-"
+                         "slot reclamation, re-mesh + bit-identical resume")
+    ap.add_argument("--num-hosts", type=int, default=None,
+                    help="logical worker / host count for the elastic "
+                         "controller (default: one per device); implies the "
+                         "controller path even without --fault-plan")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.fault_plan or args.num_hosts:
+        if args.agg_chunk:
+            ap.error("--agg-chunk is not supported on the elastic controller "
+                     "path (stacked aggregation; use --bucket-bytes instead)")
+        from repro.runtime.controller import run_controller
+
+        run_controller(cfg, steps=args.steps, global_batch=args.global_batch,
+                       seq_len=args.seq_len, agg_strategy=args.agg,
+                       agg_backend=args.agg_backend,
+                       agg_bucket_bytes=args.bucket_bytes,
+                       num_hosts=args.num_hosts, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every,
+                       fault_plan=args.fault_plan)
+        return
     train_loop(cfg, steps=args.steps, global_batch=args.global_batch,
                seq_len=args.seq_len, agg_strategy=args.agg,
                agg_backend=args.agg_backend, agg_chunk=args.agg_chunk,

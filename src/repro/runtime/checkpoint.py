@@ -8,8 +8,19 @@ Layout:
       <i>.npy              one file per leaf (host-gathered global arrays)
   <dir>/latest             text file holding the newest committed step
 
-Partially-written checkpoints (no manifest / bad sizes) are skipped on
-restore, so a crash mid-save never poisons a restart.
+Bundle layout (``save_bundle``) — params AND optimizer state (and any other
+named trees) commit in ONE atomic rename, so they can never land on
+different latest steps (the failure mode of the old split
+``<dir>`` / ``<dir>_opt`` scheme: a crash between the two saves left a
+params step with no matching opt step, and a restart silently mixed steps):
+  <dir>/step_<n>/
+      manifest.json        {"step": n, "extra": ..., "trees": ["params","opt"]}
+      params/manifest.json + <i>.npy
+      opt/manifest.json    + <i>.npy
+
+``latest_step`` only reports steps whose manifest AND every listed tree's
+manifest + leaf files exist — partially-written checkpoints (a crash
+mid-save, a torn copy) are never visible to a restart.
 """
 from __future__ import annotations
 
@@ -32,26 +43,32 @@ def _flatten(tree):
     return paths, [l for _, l in flat], treedef
 
 
-def save(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None,
-         keep: int = 3) -> str:
+def _write_manifest(d: str, manifest: dict) -> None:
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _write_tree(d: str, step: int, tree: Any, extra: dict | None = None) -> None:
+    """Write one tree's leaves + manifest into ``d`` (no commit semantics)."""
     paths, leaves, _ = _flatten(tree)
-    tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
-    final = os.path.join(ckpt_dir, f"step_{step}")
-    os.makedirs(tmp, exist_ok=True)
+    os.makedirs(d, exist_ok=True)
     manifest = {"step": step, "extra": extra or {}, "leaves": {}}
     for i, (p, leaf) in enumerate(zip(paths, leaves)):
         arr = np.asarray(jax.device_get(leaf))
         fname = f"{i}.npy"
-        np.save(os.path.join(tmp, fname), arr)
+        np.save(os.path.join(d, fname), arr)
         manifest["leaves"][p] = {
             "file": fname,
             "shape": list(arr.shape),
             "dtype": str(arr.dtype),
         }
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-        f.flush()
-        os.fsync(f.fileno())
+    _write_manifest(d, manifest)
+
+
+def _commit(ckpt_dir: str, step: int, tmp: str, keep: int) -> str:
+    final = os.path.join(ckpt_dir, f"step_{step}")
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)  # commit point
@@ -62,6 +79,29 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None,
     os.replace(os.path.join(ckpt_dir, "latest.tmp"), os.path.join(ckpt_dir, "latest"))
     _retain(ckpt_dir, keep)
     return final
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None,
+         keep: int = 3) -> str:
+    tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
+    _write_tree(tmp, step, tree, extra)
+    return _commit(ckpt_dir, step, tmp, keep)
+
+
+def save_bundle(ckpt_dir: str, step: int, trees: dict[str, Any],
+                extra: dict | None = None, keep: int = 3) -> str:
+    """Atomically commit several named trees (e.g. params + opt) as ONE step.
+
+    All trees are staged under ``step_<n>.tmp`` and become visible through a
+    single rename — a crash at any point leaves either the complete step or
+    nothing, never params without opt (module doc)."""
+    tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
+    os.makedirs(tmp, exist_ok=True)
+    names = sorted(trees)
+    for name in names:
+        _write_tree(os.path.join(tmp, name), step, trees[name])
+    _write_manifest(tmp, {"step": step, "extra": extra or {}, "trees": names})
+    return _commit(ckpt_dir, step, tmp, keep)
 
 
 def _retain(ckpt_dir: str, keep: int):
@@ -103,23 +143,35 @@ def latest_step(ckpt_dir: str) -> int | None:
     return None
 
 
+def _leaves_present(d: str, manifest: dict) -> bool:
+    for meta in manifest.get("leaves", {}).values():
+        if not os.path.exists(os.path.join(d, meta["file"])):
+            return False
+    return True
+
+
 def _valid(ckpt_dir: str, step: int) -> bool:
+    """A step is valid only when its manifest AND — for bundles — every tree
+    listed in it committed completely (all subtree manifests + leaf files)."""
     d = os.path.join(ckpt_dir, f"step_{step}")
     try:
         manifest = json.load(open(os.path.join(d, "manifest.json")))
     except (OSError, json.JSONDecodeError):
         return False
-    for meta in manifest["leaves"].values():
-        f = os.path.join(d, meta["file"])
-        if not os.path.exists(f):
+    if not _leaves_present(d, manifest):
+        return False
+    for name in manifest.get("trees", ()):
+        sub = os.path.join(d, name)
+        try:
+            sub_manifest = json.load(open(os.path.join(sub, "manifest.json")))
+        except (OSError, json.JSONDecodeError):
+            return False
+        if not _leaves_present(sub, sub_manifest):
             return False
     return True
 
 
-def restore(ckpt_dir: str, step: int, like: Any) -> tuple[Any, dict]:
-    """Restore into the structure of `like` (a pytree of arrays or
-    ShapeDtypeStructs). Returns (tree, extra)."""
-    d = os.path.join(ckpt_dir, f"step_{step}")
+def _restore_dir(d: str, like: Any) -> tuple[Any, dict]:
     manifest = json.load(open(os.path.join(d, "manifest.json")))
     paths, leaves, treedef = _flatten(like)
     out = []
@@ -133,6 +185,34 @@ def restore(ckpt_dir: str, step: int, like: Any) -> tuple[Any, dict]:
     return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]
 
 
+def restore(ckpt_dir: str, step: int, like: Any) -> tuple[Any, dict]:
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). Returns (tree, extra)."""
+    return _restore_dir(os.path.join(ckpt_dir, f"step_{step}"), like)
+
+
+def restore_bundle(ckpt_dir: str, step: int,
+                   likes: dict[str, Any]) -> tuple[dict[str, Any], dict]:
+    """Restore the named trees of a bundle step (``save_bundle`` layout).
+    Trees whose ``like`` is None are skipped (returned as None)."""
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    if "trees" not in manifest:
+        raise ValueError(
+            f"step {step} in {ckpt_dir} is not a bundle checkpoint "
+            f"(manifest has no 'trees'); use restore() for single-tree steps")
+    out = {}
+    for name, like in likes.items():
+        if like is None:
+            out[name] = None
+            continue
+        if name not in manifest["trees"]:
+            raise KeyError(f"bundle step {step} has no tree {name!r} "
+                           f"(has {manifest['trees']})")
+        out[name], _ = _restore_dir(os.path.join(d, name), like)
+    return out, manifest["extra"]
+
+
 class AsyncCheckpointer:
     """Overlaps checkpoint writes with training (one in flight at a time)."""
 
@@ -143,12 +223,23 @@ class AsyncCheckpointer:
         self._error: Exception | None = None
 
     def save(self, step: int, tree: Any, extra: dict | None = None):
+        self._launch(lambda t: save(self.ckpt_dir, step, t, extra, self.keep),
+                     tree)
+
+    def save_bundle(self, step: int, trees: dict[str, Any],
+                    extra: dict | None = None):
+        """Async atomic multi-tree commit (params + opt in one step)."""
+        self._launch(
+            lambda t: save_bundle(self.ckpt_dir, step, t, extra, self.keep),
+            trees)
+
+    def _launch(self, fn, tree):
         self.wait()
         host_tree = jax.device_get(tree)  # snapshot before training mutates
 
         def work():
             try:
-                save(self.ckpt_dir, step, host_tree, extra, self.keep)
+                fn(host_tree)
             except Exception as e:  # surfaced on next wait()
                 self._error = e
 

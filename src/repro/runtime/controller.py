@@ -1,0 +1,496 @@
+"""Failure-injecting elastic training controller: survive worker death across
+the switch dataplane and the training runtime.
+
+The paper's in-network aggregation keeps per-job state (slot pool, worker
+bitmaps) INSIDE the switch, so a worker death is not just a scheduler event:
+unfilled completion bitmaps park switch slots forever unless the control
+plane reclaims them. This controller ties the whole recovery path together in
+one emulated cluster:
+
+* **Logical workers.** The job has W fixed logical workers (= switch ports =
+  data shards), decoupled from the physical mesh. Each mesh shard hosts
+  W / mesh_size of them and the gradients aggregate through the stacked
+  integer-domain collectives (core/allreduce.py), whose bits are identical on
+  ANY mesh dividing W. That invariance is what makes elastic recovery exact.
+
+* **Heartbeats.** Hosts heartbeat after every step into a ``HealthMonitor``
+  driven by the controller's simulated clock (1 tick / step). A fault plan
+  (``parse_fault_plan``) silences a host from step k on; the monitor's
+  timeout declares it dead a few steps later — detection latency is real and
+  measured (``steps_to_detect`` in the recovery report).
+
+* **Switch reclamation.** The controller mirrors the job's streaming window
+  on a persistent emulated dataplane (one port per mesh host, monotone chunk
+  ids via ``chunk_base``). On a declared death the in-flight window is
+  drained with the failure injected: ``run_aggregation(fail_worker=...)``
+  reclaims the dead port's parked slots (``reclaimed`` stat) and the
+  survivors' shadow-copy retransmissions complete every chunk — no slot is
+  left parked. The dataplane is then rebuilt for the survivor port set.
+
+* **Data failover.** Shard ownership is re-derived from
+  ``HealthMonitor.reassignments`` every step: a dead host's shard loader is
+  rebuilt on its replacement via ``data/pipeline.reassign_shard`` (the
+  deterministic stream makes the global batch content identical), and a
+  revival retracts the reassignment again.
+
+* **Elastic resume.** Checkpoints are atomic params+opt bundles labeled with
+  the NEXT step to run. On recovery the controller discards checkpoints
+  tainted by the dead host (committed after its last heartbeat), restores the
+  newest clean bundle onto the survivor mesh via ``elastic.resume_on_mesh``,
+  rebuilds the jitted step (which re-plans the bucketed collective for the
+  new mesh), and replays. Replayed losses are asserted bit-equal to the
+  originally recorded ones — the bit-identical-resume invariant, enforced at
+  runtime, not just in tests (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import switchsim
+from repro.core.allreduce import AggConfig
+from repro.data.pipeline import ShardedLoader, SyntheticCorpus, reassign_shard
+from repro.models.registry import build, param_count
+from repro.optim import optimizers
+from repro.runtime import checkpoint as ckpt
+from repro.runtime import elastic
+from repro.runtime.health import HealthMonitor
+from repro.sharding import rules
+from repro.train.step import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# fault plans
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    step: int
+    kind: str  # "kill" | "revive" | "slow"
+    host: int
+    factor: float = 1.0  # "slow" only: reported step-time multiplier
+
+
+def parse_fault_plan(spec: str | None) -> tuple[FaultEvent, ...]:
+    """Parse ``kill:<host>@<step>[,revive:<host>@<step>,slow:<host>@<step>x<f>]``.
+
+    Examples: ``kill:2@5``; ``kill:2@5,revive:2@20``; ``slow:3@4x6``.
+    ``kill`` silences the host's heartbeats from that step on; ``revive``
+    resumes them; ``slow`` multiplies the host's reported step times (a
+    degrading host for the straggler detector) until the next event."""
+    if not spec:
+        return ()
+    events = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        try:
+            kind, rest = part.split(":", 1)
+            host_s, at = rest.split("@", 1)
+            factor = 1.0
+            if "x" in at:
+                at, f = at.split("x", 1)
+                factor = float(f)
+            ev = FaultEvent(step=int(at), kind=kind, host=int(host_s),
+                            factor=factor)
+        except ValueError as e:
+            raise ValueError(f"bad fault-plan entry {part!r} "
+                             f"(want kind:host@step[xfactor])") from e
+        if ev.kind not in ("kill", "revive", "slow"):
+            raise ValueError(f"unknown fault kind {ev.kind!r} in {part!r}")
+        events.append(ev)
+    return tuple(sorted(events, key=lambda e: e.step))
+
+
+@dataclasses.dataclass
+class RecoveryReport:
+    detected_at_step: int      # step after which the death was declared
+    dead: list[int]
+    last_good_step: int        # newest step known completed by every dead host
+    resumed_from: int          # next-step label of the restored checkpoint
+    steps_to_detect: int       # kill -> declaration latency (heartbeat timeout)
+    steps_replayed: int        # resumed_from .. detected_at_step replay length
+    mesh_hosts: list[int]      # survivor hosts backing the new mesh
+    reclaimed: int             # switch slots freed by dead-port reclamation
+    switch_stats: dict         # dataplane counters at teardown (incl. reclaimed)
+
+
+# ---------------------------------------------------------------------------
+# controller
+# ---------------------------------------------------------------------------
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+class ElasticController:
+    """Drives the training loop with heartbeats, fault injection, switch-slot
+    reclamation and bit-identical elastic resume (module doc).
+
+    ``run()`` returns a summary dict:
+      ``history``     — {step: loss} for every step 0..steps-1 (final values)
+      ``recoveries``  — [RecoveryReport as dict, ...]
+      ``stragglers``  — {step: [hosts flagged]}
+      ``switch``      — final dataplane counters (incl. ``reclaimed`` total)
+    """
+
+    def __init__(self, cfg, *, steps: int, global_batch: int, seq_len: int,
+                 agg: AggConfig, num_hosts: int | None = None,
+                 ckpt_dir: str | None = None, ckpt_every: int = 5,
+                 fault_plan: tuple[FaultEvent, ...] | str = (),
+                 seed: int = 0, heartbeat_timeout: float = 2.5,
+                 switch_slots: int = 4, switch_elems: int = 64,
+                 fingerprint_elems: int = 512, opt_overrides: dict | None = None,
+                 log_every: int = 10, strict_replay: bool = True):
+        self.cfg = cfg
+        self.steps = steps
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.agg = agg
+        self.devices = jax.devices()
+        self.num_hosts = num_hosts or len(self.devices)
+        if self.num_hosts > len(self.devices):
+            raise ValueError(f"num_hosts={self.num_hosts} exceeds "
+                             f"{len(self.devices)} devices")
+        if global_batch % self.num_hosts:
+            raise ValueError(f"global_batch={global_batch} must divide over "
+                             f"num_hosts={self.num_hosts} logical workers")
+        self.ckpt_dir = ckpt_dir or tempfile.mkdtemp(prefix="fpisa_ctl_")
+        # a controller run owns its checkpoint namespace from step 0: bundles
+        # left by a previous job would otherwise win latest_step on recovery
+        # (restoring another run's params) or evict this run's fresh bundles
+        # through the keep=N retention
+        self._reset_ckpt_dir()
+        self.ckpt_every = max(1, ckpt_every)
+        self.fault_plan = (parse_fault_plan(fault_plan)
+                           if isinstance(fault_plan, str) else tuple(fault_plan))
+        for ev in self.fault_plan:
+            # an out-of-range kill would silently never fire and a matching
+            # revive would KeyError the heartbeat loop mid-run — refuse early
+            if not 0 <= ev.host < self.num_hosts:
+                raise ValueError(
+                    f"fault plan names host {ev.host} but the job has "
+                    f"{self.num_hosts} hosts (0..{self.num_hosts - 1})")
+        self.seed = seed
+        self.switch_slots = switch_slots
+        self.switch_elems = switch_elems
+        self.fingerprint_elems = fingerprint_elems
+        self.log_every = log_every
+        self.strict_replay = strict_replay
+
+        self.model = build(cfg)
+        opt_kw = {"name": cfg.optimizer, "lr": cfg.learning_rate}
+        opt_kw.update(opt_overrides or {})
+        self.opt_cfg = optimizers.OptConfig(**opt_kw)
+
+        # W logical workers == data shards; host h primarily owns shard h
+        w = self.num_hosts
+        self.corpus = SyntheticCorpus(cfg.vocab_size, seed)
+        self._primary = {
+            h: ShardedLoader(self.corpus, global_batch, seq_len,
+                             shard_id=h, num_shards=w)
+            for h in range(w)
+        }
+        self._shard_loaders = dict(self._primary)  # shard -> current loader
+        self._shard_owner = {s: s for s in range(w)}
+
+        # simulated control-plane clock: 1 tick per training step
+        self._now = 0.0
+        self.health = HealthMonitor(hosts=list(range(w)),
+                                    timeout=heartbeat_timeout,
+                                    clock=lambda: self._now)
+        self._beating = set(range(w))     # hosts currently sending heartbeats
+        self._slow = {}                   # host -> step-time multiplier
+        self._last_beat_step = {h: -1 for h in range(w)}
+
+        # host-side templates for elastic restore (shape/dtype only)
+        params0 = self.model.init(jax.random.PRNGKey(seed))
+        self._like_params = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params0)
+        opt0 = optimizers.init(params0, self.opt_cfg)
+        self._like_opt = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), opt0)
+        self._params0_host = jax.device_get(params0)
+        self._opt0_host = jax.device_get(opt0)
+
+        self.mesh_hosts: list[int] = []
+        self.switch = None
+        self._chunk_base = 0
+        self.recoveries: list[RecoveryReport] = []
+        self.straggler_log: dict[int, list[int]] = {}
+        self._reclaimed_total = 0
+        self._remesh(sorted(self._beating), restore=False)
+
+    # -- mesh / switch lifecycle ------------------------------------------
+
+    def _remesh(self, survivors: list[int], restore: bool,
+                max_step: int | None = None) -> int:
+        """(Re)build mesh + jitted step on ``survivors``; returns the next
+        step to run (0 when starting fresh, the restored label otherwise)."""
+        w = self.num_hosts
+        d = _largest_divisor_leq(w, len(survivors))
+        self.mesh_hosts = survivors[:d]
+        devs = [self.devices[h] for h in self.mesh_hosts]
+        # data-only mesh: fully-manual shard_map, so host-callback strategies
+        # (switch_emu) work; sharding rules drop mesh-absent axes (PR 1)
+        self.mesh = elastic.make_mesh_for(devices=devs, data_only=True)
+
+        next_step = 0
+        restored = False
+        if restore:
+            if max_step is not None:
+                self._drop_tainted_checkpoints(max_step)
+            res = elastic.resume_on_mesh(self.ckpt_dir, self._like_params,
+                                         self._like_opt, self.cfg, self.mesh)
+            if res is not None:
+                self.params, self.opt_state, extra = res
+                next_step = extra["step"]
+                restored = True
+        if not restored:
+            self._place_initial()
+        # rebuilding the step re-traces stacked_allreduce_tree on the new
+        # mesh: the bucket plan and wire shift re-derive for the new k
+        self.step_fn = jax.jit(make_train_step(
+            self.model, self.mesh, self.agg, self.opt_cfg, self.global_batch,
+            logical_workers=w))
+        self._bspec = rules.batch_pspec(self.mesh, self.global_batch)
+
+        # fresh switch for the new port set (one port per mesh host)
+        self.switch = switchsim.NumpyDataplane(switchsim.DataplaneConfig(
+            num_workers=len(self.mesh_hosts), num_slots=self.switch_slots,
+            elems_per_packet=self.switch_elems))
+        return next_step
+
+    def _place_initial(self):
+        pspecs = rules.param_pspecs(self._params0_host, self.cfg, self.mesh)
+        self.params = jax.device_put(self._params0_host,
+                                     rules.named(self.mesh, pspecs))
+        ospecs = rules.opt_pspecs(pspecs, self._params0_host, self.mesh)
+        o = self._opt0_host
+        self.opt_state = optimizers.OptState(
+            step=jax.device_put(o.step, NamedSharding(self.mesh, P())),
+            m=jax.device_put(o.m, rules.named(self.mesh, ospecs)),
+            v=None if o.v is None else jax.device_put(
+                o.v, rules.named(self.mesh, ospecs)),
+        )
+
+    def _reset_ckpt_dir(self):
+        if not os.path.isdir(self.ckpt_dir):
+            return
+        wiped = 0
+        for name in os.listdir(self.ckpt_dir):
+            if name.startswith("step_"):
+                shutil.rmtree(os.path.join(self.ckpt_dir, name),
+                              ignore_errors=True)
+                wiped += 1
+            elif name in ("latest", "latest.tmp"):
+                os.remove(os.path.join(self.ckpt_dir, name))
+        if wiped:
+            print(f"[controller] reset ckpt dir {self.ckpt_dir}: removed "
+                  f"{wiped} stale checkpoint(s) from a previous run")
+
+    def _drop_tainted_checkpoints(self, max_step: int):
+        """Remove bundles committed after the dead hosts' last heartbeat —
+        they were written from state the dead host never contributed to."""
+        for s in ckpt.committed_steps(self.ckpt_dir):
+            if s > max_step:
+                shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s}"),
+                              ignore_errors=True)
+        latest = os.path.join(self.ckpt_dir, "latest")
+        if os.path.exists(latest):
+            os.remove(latest)  # force the directory-scan fallback
+
+    # -- data / switch per-step machinery ---------------------------------
+
+    def _sync_loaders(self):
+        """Derive shard -> loader from the monitor's reassignment table (the
+        single source of truth, so revivals retract automatically)."""
+        for s in range(self.num_hosts):
+            owner = self.health.reassignments.get(s, s)
+            if owner != self._shard_owner[s]:
+                self._shard_loaders[s] = (
+                    self._primary[s] if owner == s
+                    else reassign_shard(self._primary[owner], new_shard_id=s))
+                self._shard_owner[s] = owner
+
+    def _global_tokens(self, step: int) -> np.ndarray:
+        parts = [self._shard_loaders[s].batch_at(step)["tokens"]
+                 for s in range(self.num_hosts)]
+        return np.concatenate(parts, axis=0)
+
+    def _fingerprints(self, step: int) -> np.ndarray:
+        """Per-port shadow payloads mirroring the step's streaming window."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, 0x5717C4, step]))
+        return (rng.standard_normal(
+            (len(self.mesh_hosts), self.fingerprint_elems)) * 0.1
+        ).astype(np.float32)
+
+    def _switch_step(self, step: int, fail_port: int | None = None) -> dict:
+        vecs = self._fingerprints(step)
+        switchsim.run_aggregation(
+            self.switch, vecs, chunk_base=self._chunk_base,
+            fail_worker=fail_port, fail_round=1 if fail_port is not None else None)
+        self._chunk_base += -(-self.fingerprint_elems // self.switch_elems)
+        return dict(self.switch.stats)
+
+    # -- main loop ---------------------------------------------------------
+
+    def run(self) -> dict:
+        w = self.num_hosts
+        print(f"[controller] {self.cfg.name}: "
+              f"{param_count(self._params0_host)/1e6:.1f}M params, "
+              f"W={w} logical workers, mesh={dict(self.mesh.shape)}, "
+              f"agg={self.agg.strategy}, faults={list(self.fault_plan)}")
+        history: dict[int, float] = {}
+        timeline: list[dict] = []  # chronological, replays included
+        # initial clean bundle so a pre-first-checkpoint death can restore
+        ckpt.save_bundle(self.ckpt_dir, 0,
+                         {"params": self.params, "opt": self.opt_state})
+        step = 0
+        wall0 = time.time()
+        while step < self.steps:
+            for ev in self.fault_plan:
+                if ev.step == step:
+                    if ev.kind == "kill":
+                        self._beating.discard(ev.host)
+                    elif ev.kind == "revive":
+                        self._beating.add(ev.host)
+                        self._slow.pop(ev.host, None)
+                    elif ev.kind == "slow":
+                        self._slow[ev.host] = ev.factor
+
+            t0 = time.time()
+            tokens = jax.device_put(
+                self._global_tokens(step),
+                NamedSharding(self.mesh, P(*self._bspec, None)))
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, {"tokens": tokens})
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+
+            if self.strict_replay and step in history:
+                assert history[step] == loss, (
+                    f"replayed step {step} diverged: {history[step]} != {loss} "
+                    f"(bit-identical elastic resume violated)")
+            history[step] = loss
+            timeline.append({"step": step, "loss": loss, "dt": dt,
+                             "mesh": len(self.mesh_hosts)})
+            self._switch_step(step)
+
+            # heartbeats + failure detection on the simulated clock
+            self._now += 1.0
+            for h in sorted(self._beating):
+                self.health.heartbeat(h, dt * self._slow.get(h, 1.0))
+                self._last_beat_step[h] = step
+            res = self.health.check()
+            if res["stragglers"]:
+                self.straggler_log[step] = res["stragglers"]
+            self._sync_loaders()
+
+            if step % self.log_every == 0 or step == self.steps - 1:
+                tok_s = self.global_batch * self.seq_len / max(dt, 1e-9)
+                print(f"[controller] step {step:5d} loss {loss:.4f} "
+                      f"{tok_s:,.0f} tok/s mesh={len(self.mesh_hosts)}")
+
+            if res["dead"]:
+                step = self._recover(res["dead"], step)
+                continue
+
+            # revived host available again and capacity to grow? re-mesh up.
+            alive = sorted(h for h, s in self.health.hosts.items() if s.alive)
+            if _largest_divisor_leq(w, len(alive)) > len(self.mesh_hosts):
+                step = self._grow(alive, step)
+                continue
+
+            step += 1
+            if step % self.ckpt_every == 0 or step == self.steps:
+                ckpt.save_bundle(self.ckpt_dir, step,
+                                 {"params": self.params, "opt": self.opt_state},
+                                 {"loss": loss})
+        print(f"[controller] done: {self.steps} steps in "
+              f"{time.time() - wall0:.1f}s, {len(self.recoveries)} recoveries, "
+              f"{self._reclaimed_total} switch slots reclaimed")
+        return {
+            "history": [history[s] for s in range(self.steps)],
+            "timeline": timeline,
+            "recoveries": [dataclasses.asdict(r) for r in self.recoveries],
+            "stragglers": self.straggler_log,
+            "switch": dict(self.switch.stats),
+            "mesh_hosts": list(self.mesh_hosts),
+        }
+
+    # -- recovery ----------------------------------------------------------
+
+    def _recover(self, dead: list[int], step: int) -> int:
+        """Full recovery path after declared deaths; returns the next step."""
+        # 1. switch-side: drain the in-flight window with the failure live —
+        #    the dead ports' slots are reclaimed and survivors resubmit from
+        #    shadow copies; completing proves no slot stays parked.
+        stats = dict(self.switch.stats)
+        for h in dead:
+            if h in self.mesh_hosts:
+                stats = self._switch_step(step, fail_port=self.mesh_hosts.index(h))
+        reclaimed = stats["reclaimed"]
+        self._reclaimed_total += reclaimed
+
+        # 2. the dead hosts' contributions stop at their last heartbeat:
+        #    anything newer (including checkpoints) is tainted.
+        last_good = min(self._last_beat_step[h] for h in dead)
+        survivors = sorted(h for h, s in self.health.hosts.items() if s.alive)
+        if not survivors:
+            raise RuntimeError("all hosts dead; nothing to recover onto")
+
+        # 3. re-mesh the survivors + elastic restore of the newest clean bundle
+        resumed_from = self._remesh(survivors, restore=True,
+                                    max_step=last_good + 1)
+        report = RecoveryReport(
+            detected_at_step=step, dead=list(dead),
+            last_good_step=last_good, resumed_from=resumed_from,
+            steps_to_detect=step - last_good,
+            steps_replayed=max(0, step + 1 - resumed_from),
+            mesh_hosts=list(self.mesh_hosts), reclaimed=reclaimed,
+            switch_stats=stats)
+        self.recoveries.append(report)
+        print(f"[controller] RECOVERY dead={dead} detected@{step} "
+              f"last_good={last_good} resume@{resumed_from} "
+              f"mesh={self.mesh_hosts} reclaimed={reclaimed}")
+        return resumed_from
+
+    def _grow(self, alive: list[int], step: int) -> int:
+        """Scale back up onto revived hosts: checkpoint current state, then
+        re-mesh + restore (no replay needed — the state is clean)."""
+        ckpt.save_bundle(self.ckpt_dir, step + 1,
+                         {"params": self.params, "opt": self.opt_state})
+        resumed_from = self._remesh(alive, restore=True)
+        print(f"[controller] GROW mesh={self.mesh_hosts} resume@{resumed_from}")
+        return resumed_from
+
+
+def run_controller(cfg, *, steps, global_batch, seq_len, agg_strategy="fpisa",
+                   agg_backend="auto", agg_bucket_bytes=0, num_hosts=None,
+                   ckpt_dir=None, ckpt_every=5, fault_plan="", seed=0,
+                   log_every=10, opt_overrides=None) -> dict:
+    """Launcher-facing wrapper (launch/train.py ``--fault-plan`` path)."""
+    agg = AggConfig(strategy=agg_strategy, backend=agg_backend,
+                    bucket_bytes=agg_bucket_bytes)
+    ctl = ElasticController(
+        cfg, steps=steps, global_batch=global_batch, seq_len=seq_len, agg=agg,
+        num_hosts=num_hosts, ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+        fault_plan=fault_plan, seed=seed, log_every=log_every,
+        opt_overrides=opt_overrides)
+    return ctl.run()

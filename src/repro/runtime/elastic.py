@@ -16,10 +16,22 @@ from repro.runtime import checkpoint as ckpt
 from repro.sharding import rules
 
 
-def make_mesh_for(devices=None, model_parallel: int = 1, pods: int = 1):
+def make_mesh_for(devices=None, model_parallel: int = 1, pods: int = 1,
+                  data_only: bool = False):
     devices = devices if devices is not None else jax.devices()
     n = len(devices)
-    assert n % (model_parallel * pods) == 0
+    if model_parallel * pods <= 0 or n % (model_parallel * pods) != 0:
+        raise ValueError(
+            f"cannot lay {n} devices out as pods={pods} x data x "
+            f"model_parallel={model_parallel}: {n} % {model_parallel * pods} != 0")
+    if data_only:
+        # pure-DP mesh with ONLY the data axis: shard_map over it is fully
+        # manual, which host-callback strategies (switch_emu) require —
+        # pure_callback rejects meshes with any automatic axis left over
+        # (the elastic controller re-meshes with this).
+        if model_parallel != 1 or pods != 1:
+            raise ValueError("data_only mesh cannot carry model/pod axes")
+        return compat.make_mesh((n,), ("data",), devices=devices)
     data = n // (model_parallel * pods)
     if pods > 1:
         return compat.make_mesh((pods, data, model_parallel), ("pod", "data", "model"),
@@ -30,12 +42,21 @@ def make_mesh_for(devices=None, model_parallel: int = 1, pods: int = 1):
 
 def resume_on_mesh(ckpt_dir: str, like_params, like_opt, cfg, mesh: Mesh):
     """Restore the latest checkpoint and place it on `mesh` with the logical
-    sharding rules. Returns (params, opt_state, extra) or None if no ckpt."""
+    sharding rules. Returns (params, opt_state, extra) or None if no ckpt.
+
+    Expects the atomic bundle layout (``checkpoint.save_bundle`` with
+    ``params``/``opt`` trees — the only layout that guarantees both landed on
+    the same step); single-tree steps restore params only."""
     step = ckpt.latest_step(ckpt_dir)
     if step is None:
         return None
-    params_host, extra = ckpt.restore(ckpt_dir, step, like_params)
-    opt_host, _ = ckpt.restore(ckpt_dir + "/opt", step, like_opt) if like_opt is not None else (None, None)
+    try:
+        trees, extra = ckpt.restore_bundle(
+            ckpt_dir, step, {"params": like_params, "opt": like_opt})
+        params_host, opt_host = trees["params"], trees["opt"]
+    except ValueError:  # legacy single-tree checkpoint: params only
+        params_host, extra = ckpt.restore(ckpt_dir, step, like_params)
+        opt_host = None
 
     pspecs = rules.param_pspecs(params_host, cfg, mesh)
     params = jax.device_put(params_host, rules.named(mesh, pspecs))

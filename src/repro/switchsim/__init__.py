@@ -27,5 +27,6 @@ from repro.switchsim.dataplane import (  # noqa: F401
     NumpyDataplane,
     ingest_batch,
     init_state,
+    reclaim_dead_worker,
     run_aggregation,
 )

@@ -49,8 +49,32 @@ turns these counters plus wall-clock packets/sec into the goodput figure.
 Stats: ``packets`` (accepted adds), ``duplicates`` (bitmap hits),
 ``stale`` (retransmissions for an already-recycled slot — counted separately
 from duplicates, unlike the pre-refactor emulator which conflated them),
-``overwrite`` / ``overflow`` (element counts from the FPISA adds), and
+``overwrite`` / ``overflow`` (element counts from the FPISA adds),
+``reclaimed`` (in-flight slots freed by dead-worker reclamation, below), and
 ``recirculations`` per pipeline.
+
+Worker-failure reclamation
+--------------------------
+A worker that dies mid-aggregation parks every slot still waiting on its
+bitmap bit: completion requires all worker bits, so those slots would never
+complete and the pool would leak. ``reclaim_worker`` is the control-plane
+recovery op, invoked once a heartbeat timeout declares the worker dead (the
+training runtime's ``HealthMonitor``; ``run_aggregation`` models the same
+timeout with ``detect_rounds``):
+
+* the worker is removed from the *live set* — completion henceforth requires
+  only the live workers' bits, and late packets from the dead worker are
+  dropped (counted under ``stale``);
+* every **in-flight** slot (claimed, result not yet cached) is reset —
+  accumulator planes zeroed, bitmap cleared — and counted in ``reclaimed``.
+  Survivors still hold the shadow copies of their un-acked chunks (SwitchML's
+  retransmission buffer), so their normal timeout retransmissions *resubmit*
+  the reset slots from scratch and the chunk completes as a live-worker-only
+  sum. Completed slots keep re-serving their cached full-worker results
+  unchanged (those chunks finished before the death was declared).
+
+All three dataplanes (batched jit, legacy per-packet shim, numpy) implement
+the identical reclamation semantics; tests/test_recovery.py pins the parity.
 """
 from __future__ import annotations
 
@@ -68,7 +92,8 @@ from repro.core import fpisa
 
 _PACKED_DTYPE = {"fp32": jnp.float32, "fp16": jnp.float16, "bf16": jnp.bfloat16}
 
-COUNTERS = ("packets", "duplicates", "stale", "overwrite", "overflow")
+COUNTERS = ("packets", "duplicates", "stale", "overwrite", "overflow",
+            "reclaimed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,6 +144,7 @@ class DataplaneState(NamedTuple):
     result_valid: jax.Array  # (G,) bool
     counters: jax.Array  # (len(COUNTERS),) int32
     recirc: jax.Array  # (P,) int32 per-pipeline recirculation counter
+    live: jax.Array  # (W,) bool — workers still in the aggregation group
 
 
 def init_state(cfg: DataplaneConfig) -> DataplaneState:
@@ -132,6 +158,25 @@ def init_state(cfg: DataplaneConfig) -> DataplaneState:
         result_valid=jnp.zeros((g,), bool),
         counters=jnp.zeros((len(COUNTERS),), jnp.int32),
         recirc=jnp.zeros((cfg.num_pipelines,), jnp.int32),
+        live=jnp.ones((cfg.num_workers,), bool),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def reclaim_dead_worker(state: DataplaneState, worker, *,
+                        cfg: DataplaneConfig) -> DataplaneState:
+    """Remove ``worker`` from the live set and reset every in-flight slot
+    (module doc: Worker-failure reclamation). Idempotent: reclaiming an
+    already-dead worker is a no-op."""
+    was_live = state.live[worker]
+    inflight = was_live & (state.slot_chunk >= 0) & ~state.result_valid
+    return state._replace(
+        exp=jnp.where(inflight[:, None], 0, state.exp),
+        man=jnp.where(inflight[:, None], 0, state.man),
+        seen=jnp.where(inflight[:, None], False, state.seen),
+        live=state.live.at[worker].set(False),
+        counters=state.counters.at[COUNTERS.index("reclaimed")].add(
+            jnp.sum(inflight).astype(jnp.int32)),
     )
 
 
@@ -206,8 +251,9 @@ def ingest_batch(state: DataplaneState, workers, chunks, payloads, valid, *,
         inp = fpisa.Planes(planes.exp[pi], planes.man[pi])
 
         cur = st.slot_chunk
-        is_stale = active & (cur > ck)
-        is_new = active & (cur < ck)
+        # packets from reclaimed (dead) workers are dropped like stale ones
+        is_stale = active & (~st.live[wk] | (cur > ck))
+        is_new = active & ~is_stale & (cur < ck)
         proceed = active & ~is_stale
 
         # claim: first packet of a newer chunk resets the (recycled) slot
@@ -225,7 +271,8 @@ def ingest_batch(state: DataplaneState, workers, chunks, payloads, valid, *,
         exp = jnp.where(do_add[:, None], newp.exp, exp)
         man = jnp.where(do_add[:, None], newp.man, man)
         seen = seen | (do_add[:, None] & (jnp.arange(w_n)[None, :] == wk[:, None]))
-        complete = do_add & jnp.all(seen, axis=1)
+        # completion requires every LIVE worker's bit (dead bits are waived)
+        complete = do_add & jnp.all(seen | ~st.live[None, :], axis=1)
 
         # delayed renormalization only on rounds that complete a slot
         result, rvalid = lax.cond(
@@ -258,6 +305,7 @@ def ingest_batch(state: DataplaneState, workers, chunks, payloads, valid, *,
             jnp.sum(do_add), jnp.sum(is_dup), jnp.sum(is_stale),
             jnp.sum(jnp.where(do_add[:, None], addst.overwrite, False)),
             jnp.sum(jnp.where(do_add[:, None], addst.overflow, False)),
+            jnp.zeros((), jnp.int32),  # reclaimed: control-plane op only
         ]).astype(jnp.int32)
         # RSAW full-add costs one recirculation pass per accepted packet
         recirc = st.recirc
@@ -266,7 +314,7 @@ def ingest_batch(state: DataplaneState, workers, chunks, payloads, valid, *,
                 do_add.astype(jnp.int32), lane_pipe, num_segments=cfg.num_pipelines)
 
         st = DataplaneState(exp, man, seen, slot_chunk, result, rvalid,
-                            counters, recirc)
+                            counters, recirc, st.live)
         return (st, ready, results, accepted), None
 
     (state, ready, results, accepted), _ = lax.scan(
@@ -345,6 +393,13 @@ class BatchedDataplane:
                 queue = np.concatenate([cur[dfr], queue])
         return ready, results, accepted
 
+    def reclaim_worker(self, worker: int):
+        """Control-plane recovery: drop ``worker`` from the live set and reset
+        its parked in-flight slots (module doc). Survivor retransmissions
+        resubmit the reset chunks from their shadow copies."""
+        self.state = reclaim_dead_worker(
+            self.state, jnp.int32(worker), cfg=self.cfg)
+
     @property
     def stats(self) -> dict:
         c = np.asarray(self.state.counters)
@@ -376,8 +431,20 @@ class NumpyDataplane:
         self._slot_chunk = np.full((g,), -1, np.int64)
         self._result = np.zeros((g, e), np.float32)
         self._result_valid = np.zeros((g,), bool)
+        self._live = np.ones((cfg.num_workers,), bool)
         self.stats = {name: 0 for name in COUNTERS}
         self.stats["recirculations"] = [0] * cfg.num_pipelines
+
+    def reclaim_worker(self, worker: int):
+        """Same reclamation semantics as ``BatchedDataplane.reclaim_worker``."""
+        if not self._live[worker]:
+            return
+        self._live[worker] = False
+        inflight = (self._slot_chunk >= 0) & ~self._result_valid
+        self._exp[inflight] = 0
+        self._man[inflight] = 0
+        self._seen[inflight] = False
+        self.stats["reclaimed"] += int(inflight.sum())
 
     def ingest_batch(self, workers, chunks, payloads):
         cfg, F = self.cfg, self._np
@@ -394,7 +461,7 @@ class NumpyDataplane:
         accepted = np.zeros(b, bool)
         for i in range(b):
             g, w, c = int(gids[i]), int(workers[i]), int(chunks[i])
-            if self._slot_chunk[g] > c:
+            if not self._live[w] or self._slot_chunk[g] > c:
                 self.stats["stale"] += 1
                 continue
             if self._slot_chunk[g] < c:  # claim the (recycled) slot
@@ -418,7 +485,7 @@ class NumpyDataplane:
             accepted[i] = True
             if cfg.variant == "full":
                 self.stats["recirculations"][g // cfg.physical_slots_per_pipeline] += 1
-            if self._seen[g].all():
+            if (self._seen[g] | ~self._live).all():
                 self._result[g] = F.renormalize(self._exp[g], self._man[g])
                 self._result_valid[g] = True
                 ready[i] = True
@@ -433,6 +500,10 @@ def run_aggregation(
     seed: int = 0,
     max_rounds: int = 10_000,
     record_arrivals: bool = False,
+    fail_worker: int | None = None,
+    fail_round: int | None = None,
+    detect_rounds: int = 2,
+    chunk_base: int = 0,
 ):
     """Batch-per-round all-reduce driver over an unreliable fabric.
 
@@ -452,6 +523,23 @@ def run_aggregation(
     Returns the aggregated (N,) vector; with ``record_arrivals`` (batched
     path only) also a {chunk: [workers in acceptance order]} dict for
     replaying the exact switch-arrival order through the jnp reference.
+
+    Fault injection: with ``fail_worker``/``fail_round`` set, that worker
+    crashes at the start of that round — it stops sending, and no result
+    delivery is owed to it. ``detect_rounds`` rounds later the control plane's
+    heartbeat timeout fires and ``switch.reclaim_worker`` frees its parked
+    slots; the survivors' normal retransmissions (their shadow copies) then
+    resubmit the reset chunks and the aggregation completes as a live-worker
+    sum. Chunks whose slots completed before the death keep the dead worker's
+    contribution (their cached results are re-served unchanged). The fault
+    path consumes the shared RNG stream identically for every switch type, so
+    per-packet/batched/numpy runs stay bit-identical under injected failures.
+
+    ``chunk_base`` offsets the on-wire chunk ids so one switch can carry many
+    consecutive calls (e.g. one per training step) without its slot state
+    going stale: chunk ids stay monotonic across calls, which is exactly the
+    SwitchML recycling discipline. State carried over from the previous call
+    is recycled naturally as the new chunks claim slots.
     """
     cfg = switch.cfg
     w, n = worker_vectors.shape
@@ -468,8 +556,16 @@ def run_aggregation(
     out = np.zeros((nchunks, e), np.float32)
     have_result = np.zeros((w, nchunks), bool)
     arrivals: dict[int, list[int]] = {}
+    reclaim_at: int | None = None
 
-    for _ in range(max_rounds):
+    for rnd in range(max_rounds):
+        if fail_round is not None and rnd == fail_round and fail_worker is not None:
+            # the worker crashes: it stops sending and is owed no delivery
+            have_result[fail_worker, :] = True
+            reclaim_at = rnd + detect_rounds  # heartbeat timeout fires then
+        if reclaim_at is not None and rnd >= reclaim_at:
+            switch.reclaim_worker(fail_worker)
+            reclaim_at = None
         if have_result.all():
             break
         elig = ~have_result
@@ -482,7 +578,8 @@ def run_aggregation(
             continue
         payloads = vecs3[ws, cs]
         if batched:
-            ready, results, accepted = switch.ingest_batch(ws, cs, payloads)
+            ready, results, accepted = switch.ingest_batch(
+                ws, cs + chunk_base, payloads)
             if record_arrivals:
                 for i in np.nonzero(accepted)[0]:
                     arrivals.setdefault(int(cs[i]), []).append(int(ws[i]))
@@ -493,7 +590,7 @@ def run_aggregation(
             results = np.zeros((ws.size, e), np.float32)
             for i in range(ws.size):
                 res = switch.ingest(
-                    legacy.Packet(int(ws[i]), int(cs[i]), payloads[i]))
+                    legacy.Packet(int(ws[i]), int(cs[i]) + chunk_base, payloads[i]))
                 if res is not None:
                     ready[i] = True
                     results[i] = res.payload

@@ -28,10 +28,23 @@ Gradient aggregation is per-leaf by default; with ``agg.bucket_bytes`` set
 through fixed-size block-aligned wire buckets with double-buffered dispatch
 (core/bucketer.py) — bit-identical results, but the encode/decode overhead is
 paid per bucket instead of per leaf and overlaps the in-flight collective.
+
+Logical-worker mode (``logical_workers`` = W > 0) decouples the aggregation
+group from the physical mesh for elastic fault tolerance: the global batch is
+owned by W fixed logical workers (= switch ports); each mesh shard hosts
+k = W / mesh_size of them, computes their gradients SEPARATELY (lax.map over
+the local workers), and aggregates through the stacked integer-domain
+collectives (core/allreduce.py stacked section). Because the wire shift is
+derived from W and integer addition is associative, the aggregated gradient
+— and the fixed-order loss reduction over the gathered (W,) per-worker loss
+vector — are bit-identical on ANY mesh that divides W. That is what lets
+runtime/controller.py resume training on a survivor mesh after a host death
+with a trajectory equal, bit for bit, to the uninterrupted run.
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import Sequence
 
 import jax
@@ -39,7 +52,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core.allreduce import AggConfig, allreduce_tree
+from repro.core.allreduce import AggConfig, allreduce_tree, stacked_allreduce_tree
 from repro.optim import optimizers
 from repro.sharding import rules
 
@@ -51,15 +64,34 @@ def _replica_axes(mesh: Mesh, cfg) -> tuple:
 
 
 def make_train_step(model, mesh: Mesh, agg: AggConfig, opt_cfg: optimizers.OptConfig,
-                    global_batch: int, accum_steps: int = 1):
+                    global_batch: int, accum_steps: int = 1,
+                    logical_workers: int = 0):
     """Returns step_fn(params, opt_state, batch) -> (params, opt_state, metrics).
 
     ``accum_steps`` > 1 splits the per-device batch into microbatches and
     scans over them, accumulating gradients in f32 — divides the remat
     activation live-set by the microbatch count at the cost of re-running the
-    (already overlapped) backward collectives per microbatch."""
+    (already overlapped) backward collectives per microbatch.
+
+    ``logical_workers`` > 0 selects logical-worker mode (module doc): W fixed
+    aggregation ports independent of the mesh size; requires a non-native
+    aggregation strategy, ``accum_steps == 1``, and a mesh whose replica
+    extent divides both W and the global batch."""
     cfg = model.cfg
     boundary = _replica_axes(mesh, cfg)
+    if logical_workers:
+        if agg.strategy == "native" or not boundary:
+            raise ValueError(
+                "logical_workers needs an explicit aggregation boundary with "
+                f"a non-native strategy (got strategy={agg.strategy!r}, "
+                f"boundary={boundary})")
+        if accum_steps != 1:
+            raise ValueError("logical_workers is incompatible with accum_steps")
+        repl = math.prod(mesh.shape[a] for a in boundary)
+        if logical_workers % repl or global_batch % logical_workers:
+            raise ValueError(
+                f"logical_workers={logical_workers} must be a multiple of the "
+                f"replica extent {repl} and divide global_batch={global_batch}")
 
     def grads_and_loss(params, batch):
         if accum_steps <= 1:
@@ -89,12 +121,41 @@ def make_train_step(model, mesh: Mesh, agg: AggConfig, opt_cfg: optimizers.OptCo
         batch_axes = rules.batch_axes(mesh, global_batch)
         manual_batch_axes = tuple(a for a in batch_axes if a in boundary)
 
-        def sharded_grads(params, batch):
-            loss, grads = grads_and_loss(params, batch)
-            # per-leaf or bucketed per agg.bucket_bytes (core/bucketer.py)
-            grads = allreduce_tree(grads, boundary, agg)
-            loss = jax.lax.pmean(loss, boundary)
-            return loss, grads
+        if logical_workers:
+            def sharded_grads(params, batch):
+                # this shard hosts k = W / replica_extent logical workers,
+                # each owning a fixed global-batch slice (contiguous: shard d
+                # hosts workers [d*k, (d+1)*k) — matches _gather_logical)
+                repl = math.prod(compat.axis_size(a) for a in boundary)
+                k = logical_workers // repl
+
+                def split(leaf):
+                    b = leaf.shape[0]
+                    assert b % k == 0, (b, k)
+                    return leaf.reshape(k, b // k, *leaf.shape[1:])
+
+                losses, grads = jax.lax.map(
+                    lambda mb: jax.value_and_grad(model.loss)(params, mb),
+                    jax.tree.map(split, batch))
+                # stacked integer-domain aggregation over (worker, mesh) —
+                # bit-identical on any mesh dividing W (core/allreduce.py)
+                grads = stacked_allreduce_tree(grads, boundary, agg)
+                # fixed-order loss reduction: the gathered (W,) vector has the
+                # same shape and order on every mesh. The sum MUST be a scan —
+                # a jnp.sum here gets pattern-matched into a cross-device
+                # all-reduce whose grouping follows the mesh size, and the
+                # scalar stops being bit-reproducible across re-meshes.
+                gathered = jax.lax.all_gather(losses, boundary).reshape(-1)
+                loss, _ = jax.lax.scan(
+                    lambda c, v: (c + v, None), jnp.float32(0), gathered)
+                return loss / logical_workers, grads
+        else:
+            def sharded_grads(params, batch):
+                loss, grads = grads_and_loss(params, batch)
+                # per-leaf or bucketed per agg.bucket_bytes (core/bucketer.py)
+                grads = allreduce_tree(grads, boundary, agg)
+                loss = jax.lax.pmean(loss, boundary)
+                return loss, grads
 
         def batch_spec(leaf):
             return P(*( [manual_batch_axes if manual_batch_axes else None]

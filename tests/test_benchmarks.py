@@ -20,6 +20,7 @@ MODULES = [
     "fig10_goodput",
     "fig11_e2e_speedup",
     "fig13_queries",
+    "fig_recovery",
     "tab3_resource_util",
     "roofline",
 ]
@@ -51,6 +52,15 @@ SCHEMAS = {
     "roofline": {
         "kernels": ["jnp", "two_pass", "fused"],
         "fused_ge_two_pass": None,
+    },
+    "recovery": {
+        "switch": ["num_workers", "drop_prob", "nchunks", "clean_s",
+                   "faulted_s", "overhead_x", "reclaimed",
+                   "clean_goodput_pps", "faulted_goodput_pps", "completed"],
+        "training": ["steps", "kill_at", "steps_to_detect", "steps_replayed",
+                     "steps_to_recover", "reclaimed", "survivor_mesh",
+                     "recovery_overhead_x", "pre_failure_tok_s",
+                     "post_failure_tok_s", "bit_identical"],
     },
 }
 
@@ -96,3 +106,11 @@ def test_benchmark_suite_smoke(tmp_path):
     assert fig11["results"]["bucketing"]["bit_identical"] is True
     fig10 = json.loads((tmp_path / "BENCH_fig10.json").read_text())
     assert fig10["results"]["dataplane"]["bit_identical"] is True
+    # the ISSUE-4 recovery invariants hold at smoke size too: the faulted
+    # switch run completed with slots actually reclaimed, and the kill-and-
+    # resume trajectory matched the uninterrupted run bit for bit
+    rec = json.loads((tmp_path / "BENCH_recovery.json").read_text())["results"]
+    assert rec["switch"]["completed"] is True
+    assert rec["switch"]["reclaimed"] > 0
+    assert rec["training"]["bit_identical"] is True
+    assert rec["training"]["reclaimed"] > 0
