@@ -21,7 +21,7 @@ from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import emit, scaled, timeit, write_json
 from repro import compat
-from repro.core.allreduce import AggConfig, allreduce_tree
+from repro.core.agg import AggConfig, Aggregator
 
 MODELS = {  # gradient elements (paper's benchmarks, param counts)
     "MobileNetV2": 3.5e6, "GoogleNet": 6.6e6, "ResNet-50": 25.6e6,
@@ -55,10 +55,10 @@ def bench_bucketing():
     mesh = compat.make_mesh((jax.device_count(),), ("data",))
 
     def make(bucket_bytes: int):
-        cfg = AggConfig(strategy="fpisa", backend="jnp",
-                        bucket_bytes=bucket_bytes)
+        agg = Aggregator(AggConfig(strategy="fpisa", backend="jnp",
+                                   bucket_bytes=bucket_bytes), ("data",))
         return jax.jit(compat.shard_map(
-            lambda t: allreduce_tree(t, ("data",), cfg), mesh=mesh,
+            agg.allreduce_tree, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(), tree),),
             out_specs=jax.tree.map(lambda _: P(), tree), check_vma=False))
 

@@ -79,7 +79,7 @@ def _switch_half() -> dict:
 _TRAIN_CODE = r"""
 import json, tempfile, sys
 from repro.configs import get_smoke_config
-from repro.core.allreduce import AggConfig
+from repro.core.agg import AggConfig
 from repro.runtime.controller import ElasticController
 
 steps, kill_at = {steps}, {kill_at}

@@ -6,10 +6,10 @@
 3. Show the paper's headline numerics: tiny error, bounded overwrite events,
    bit-exact reproducibility for the production path.
 
-The production path honors the same knobs as the launch CLIs
-(launch/train.py, launch/dryrun.py):
+The production path honors the same shared knobs as every launch CLI
+(repro.core.agg.add_agg_args — launch/train.py, launch/dryrun.py, serve_lm):
   --agg-backend {auto,jnp,pallas}   encode/decode transform backend
-  --chunk-elems N                   stream the gradient in N-element chunks
+  --agg-chunk N                     stream the gradient in N-element chunks
   --bucket-bytes N                  bucketed whole-pytree aggregation (step 4)
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--agg-backend jnp]
@@ -23,20 +23,12 @@ import jax.numpy as jnp
 
 from repro.core import fpisa as F
 from repro.core import numerics as nx
-from repro.core.allreduce import resolve_backend
+from repro.core.agg import add_agg_args, resolve_backend
 from repro.kernels import fpisa_fused
 
 ap = argparse.ArgumentParser()
-ap.add_argument("--agg-backend", default="auto", choices=["auto", "jnp", "pallas"],
-                help="pre/post-aggregation transform backend (matches the "
-                     "launch/train.py --agg-backend flag)")
-ap.add_argument("--chunk-elems", type=int, default=0,
-                help="process the flattened gradient in chunks of this many "
-                     "elements (matches launch/dryrun.py --agg-chunk; 0 = "
-                     "whole-tensor)")
-ap.add_argument("--bucket-bytes", type=int, default=1 << 16,
-                help="wire-bucket size for the whole-pytree demo in step 4 "
-                     "(matches launch/train.py --bucket-bytes)")
+add_agg_args(ap)  # the same shared --agg-* flags every entry point uses
+ap.set_defaults(bucket_bytes=1 << 16)  # step 4's whole-pytree demo
 args = ap.parse_args()
 backend = resolve_backend(args.agg_backend)
 
@@ -90,13 +82,13 @@ def block_aggregate(chunk: np.ndarray) -> jnp.ndarray:
     return F.block_decode(man_sum, bmax, BLOCK, s)
 
 
-chunk = args.chunk_elems or N
-assert chunk % BLOCK == 0, "--chunk-elems must be a multiple of 256"
+chunk = args.agg_chunk or N
+assert chunk % BLOCK == 0, "--agg-chunk must be a multiple of 256"
 out = jnp.concatenate([block_aggregate(grads[:, lo:lo + chunk])
                        for lo in range(0, N, chunk)])
 err2 = np.abs(np.asarray(out, np.float64) - exact)
 print(f"FPISA block-integer psum [{backend}"
-      f"{', chunked' if args.chunk_elems else ''}]: "
+      f"{', chunked' if args.agg_chunk else ''}]: "
       f"p99 err {np.quantile(err2,0.99):.2e}")
 
 perm = rng.permutation(W)
@@ -114,7 +106,7 @@ print("permutation-invariant bit-exact:", bool(jnp.all(out == out2)),
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core.allreduce import AggConfig, allreduce_tree
+from repro.core.agg import AggConfig, Aggregator
 
 mesh = compat.make_mesh((jax.device_count(),), ("data",))
 tree = {f"layer{i}": jnp.asarray(
@@ -123,10 +115,10 @@ tree = {f"layer{i}": jnp.asarray(
 
 
 def agg_tree(bucket_bytes: int):
-    cfg = AggConfig(strategy="fpisa", backend=args.agg_backend,
-                    bucket_bytes=bucket_bytes)
+    agg = Aggregator(AggConfig(strategy="fpisa", backend=args.agg_backend,
+                               bucket_bytes=bucket_bytes), ("data",))
     fn = compat.shard_map(
-        lambda t: allreduce_tree(t, ("data",), cfg), mesh=mesh,
+        agg.allreduce_tree, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(), tree),),
         out_specs=jax.tree.map(lambda _: P(), tree), check_vma=False)
     return jax.jit(fn)(tree)

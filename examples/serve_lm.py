@@ -1,8 +1,14 @@
 """Batched serving example: prefill + greedy decode over a request queue
 using the ServeEngine (static batching, per-slot KV caches).
 
-Run:  PYTHONPATH=src python examples/serve_lm.py
+The engine takes the same shared ``--agg-*`` flags as the training CLIs
+(repro.core.agg.add_agg_args): per-batch serving telemetry is aggregated
+across the data axis through the same Aggregator facade the trainers use —
+one aggregation surface for the whole repo.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--agg-strategy fpisa]
 """
+import argparse
 import time
 
 import numpy as np
@@ -10,18 +16,28 @@ import numpy as np
 import jax
 
 from repro.configs import get_smoke_config
+from repro.core.agg import AggConfig, add_agg_args
 from repro.models.registry import build, param_count
 from repro.serve.engine import Request, ServeEngine
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    add_agg_args(ap)  # the shared --agg-* flags (repro.core.agg)
+    args = ap.parse_args()
+    try:
+        agg = AggConfig.from_args(args)
+    except ValueError as e:
+        ap.error(str(e))
+
     cfg = get_smoke_config("internlm2-20b").with_(num_layers=4, d_model=128,
                                                   num_heads=8, num_kv_heads=2)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    print(f"serving {cfg.name}: {param_count(params)/1e6:.1f}M params")
+    print(f"serving {cfg.name}: {param_count(params)/1e6:.1f}M params, "
+          f"telemetry agg={agg.strategy}")
 
-    eng = ServeEngine(model, params, batch_size=4, max_len=128)
+    eng = ServeEngine(model, params, batch_size=4, max_len=128, agg=agg)
     rng = np.random.default_rng(0)
     reqs = [
         Request(rid=i,
@@ -35,6 +51,7 @@ def main():
     total_new = sum(len(r.tokens) for r in results)
     print(f"{len(reqs)} requests, {total_new} tokens in {dt:.2f}s "
           f"({total_new/dt:.1f} tok/s incl. compile)")
+    print(f"telemetry (aggregated via {eng.aggregator}): {eng.telemetry}")
     for r in results[:3]:
         print(f"  rid={r.rid} -> {r.tokens[:8].tolist()}...")
 

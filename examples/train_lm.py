@@ -9,26 +9,17 @@ Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
 import argparse
 
 from repro.configs import get_config
+from repro.core.agg import AggConfig, add_agg_args
 from repro.launch.train import train_loop
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--agg", default="fpisa",
-                    choices=["native", "fpisa", "switchml", "fpisa_seq",
-                             "switch_emu"])
-    ap.add_argument("--agg-backend", default="auto",
-                    choices=["auto", "jnp", "pallas"],
-                    help="pre/post-collective transform backend (matches "
-                         "launch/train.py: fused Pallas kernels on TPU)")
-    ap.add_argument("--agg-chunk", type=int, default=0,
-                    help="stream the aggregation through chunks of this many "
-                         "elements (0 = whole-tensor)")
-    ap.add_argument("--bucket-bytes", type=int, default=0,
-                    help="stream the gradient pytree through fixed-size "
-                         "block-aligned wire buckets (core/bucketer.py; "
-                         "bit-identical to per-leaf; 0 = per-leaf)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny smoke-size config instead of the ~100M model "
+                         "(CI examples-smoke job)")
+    add_agg_args(ap)  # the shared --agg-* flags (repro.core.agg)
     ap.add_argument("--ckpt-dir", default=None,
                     help="default /tmp/fpisa_train_lm (normal path) or "
                          "/tmp/fpisa_train_lm_fault (--fault-plan path: the "
@@ -45,23 +36,31 @@ def main():
                          "(default: one per device)")
     args = ap.parse_args()
 
-    # ~100M-param qwen-family config (20 layers x 640 wide, 32k vocab)
-    cfg = get_config("qwen1.5-0.5b").with_(
-        name="qwen-100m", num_layers=20, d_model=640, num_heads=10,
-        num_kv_heads=10, d_ff=1792, vocab_size=32768,
-        param_dtype="float32", activation_dtype="float32",
-        attn_q_chunk=256, learning_rate=3e-4,
-    )
+    if args.smoke:
+        from repro.configs import get_smoke_config
+
+        cfg = get_smoke_config("qwen1.5-0.5b")
+    else:
+        # ~100M-param qwen-family config (20 layers x 640 wide, 32k vocab)
+        cfg = get_config("qwen1.5-0.5b").with_(
+            name="qwen-100m", num_layers=20, d_model=640, num_heads=10,
+            num_kv_heads=10, d_ff=1792, vocab_size=32768,
+            param_dtype="float32", activation_dtype="float32",
+            attn_q_chunk=256, learning_rate=3e-4,
+        )
+    try:
+        agg = AggConfig.from_args(args)
+    except ValueError as e:
+        ap.error(str(e))
     if args.fault_plan or args.num_hosts:
-        if args.agg_chunk:
+        if agg.chunk_elems:
             ap.error("--agg-chunk is not supported on the elastic controller "
                      "path (stacked aggregation; use --bucket-bytes instead)")
         from repro.runtime.controller import run_controller
 
         summary = run_controller(
             cfg, steps=args.steps, global_batch=8, seq_len=256,
-            agg_strategy=args.agg, agg_backend=args.agg_backend,
-            agg_bucket_bytes=args.bucket_bytes, num_hosts=args.num_hosts,
+            agg=agg, num_hosts=args.num_hosts,
             ckpt_dir=args.ckpt_dir or "/tmp/fpisa_train_lm_fault",
             fault_plan=args.fault_plan)
         hist = summary["history"]
@@ -71,11 +70,11 @@ def main():
               f"{sum(r['reclaimed'] for r in summary['recoveries'])}")
         return
     params, opt, hist = train_loop(
-        cfg, steps=args.steps, global_batch=8, seq_len=256,
-        agg_strategy=args.agg, agg_backend=args.agg_backend,
-        agg_chunk=args.agg_chunk, agg_bucket_bytes=args.bucket_bytes,
-        ckpt_dir=args.ckpt_dir or "/tmp/fpisa_train_lm", ckpt_every=50,
-        log_every=10,
+        cfg, steps=args.steps, global_batch=8,
+        seq_len=64 if args.smoke else 256, agg=agg,
+        ckpt_dir=args.ckpt_dir or (
+            "/tmp/fpisa_train_lm_smoke" if args.smoke else "/tmp/fpisa_train_lm"),
+        ckpt_every=50, log_every=10,
     )
     print(f"final loss {hist[-1]:.4f} (from {hist[0]:.4f}); "
           f"resume supported via --ckpt-dir (re-run to continue)")

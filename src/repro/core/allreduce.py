@@ -66,11 +66,22 @@ The chunked streaming path (``chunk_elems``) threads the backend through
 unchanged: each scanned chunk runs the fused kernel on its own (chunk/block,
 block) tile grid, so only one chunk's mantissa plane is ever live — the
 whole-tensor planes are never materialized on either backend.
+
+Public API
+----------
+This module holds the strategy *implementations*; the public aggregation
+surface is the :class:`repro.core.agg.Aggregator` facade, where every
+strategy below registers itself (``register_strategy``) with its capability
+flags. The module-level ``allreduce`` / ``allreduce_tree`` /
+``stacked_allreduce[_tree]`` functions are retained as thin deprecation
+shims delegating to the facade; ``AggConfig``, ``resolve_backend``,
+``BACKENDS`` and ``DEFAULT_BLOCK`` are re-exported from ``repro.core.agg``
+for backwards compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
+import warnings
 from typing import Sequence
 
 import numpy as np
@@ -80,51 +91,13 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import compat
+from repro.core import agg as _agg
+from repro.core.agg import (  # noqa: F401  (re-exported legacy surface)
+    AggConfig, BACKENDS, DEFAULT_BLOCK, register_strategy, resolve_backend,
+)
 from repro.core import fpisa
 from repro.core import numerics as nx
 from repro.kernels import fpisa_fused
-
-DEFAULT_BLOCK = 256
-
-BACKENDS = ("auto", "jnp", "pallas")
-
-
-@dataclasses.dataclass(frozen=True)
-class AggConfig:
-    strategy: str = "fpisa"  # native | switchml | fpisa | fpisa_seq
-    block: int = DEFAULT_BLOCK
-    wire_bits: int = 32
-    fmt_name: str = "fp32"
-    # wire bits for the cross-pod hop when hierarchical (defaults to wire_bits)
-    pod_wire_bits: int | None = None
-    # process the flattened gradient in chunks of this many elements (scan):
-    # bounds the transient f32/int32 plane memory to O(chunk) instead of
-    # O(total params) — a 20B-param model otherwise materializes ~160 GB of
-    # planes. 0 disables chunking. Chunking also matches the switch reality:
-    # aggregation is streamed per-packet, never whole-tensor.
-    chunk_elems: int = 0
-    # encode/decode transform backend: "jnp" | "pallas" | "auto" (module doc).
-    backend: str = "auto"
-    # tree-level bucketing (core/bucketer.py): flatten the gradient pytree
-    # into fixed-size wire buckets (leaf offsets padded to block boundaries so
-    # every strategy stays bit-identical to the per-leaf path) and dispatch
-    # them double-buffered. 0 = legacy per-leaf tree_map. See DESIGN.md §3.
-    bucket_bytes: int = 0
-
-    def __post_init__(self):
-        if self.backend not in BACKENDS:
-            raise ValueError(f"backend must be one of {BACKENDS}, got {self.backend!r}")
-
-    @property
-    def fmt(self) -> fpisa.FpFormat:
-        return fpisa.FORMATS[self.fmt_name]
-
-
-def resolve_backend(backend: str) -> str:
-    """Map "auto" to the best backend for the current jax platform."""
-    if backend == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "jnp"
-    return backend
 
 
 def _interpret() -> bool:
@@ -456,15 +429,6 @@ def switch_emu_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig
     return out.reshape(x.shape).astype(x.dtype)
 
 
-STRATEGIES = {
-    "native": native_allreduce,
-    "switchml": switchml_allreduce,
-    "fpisa": fpisa_allreduce,
-    "fpisa_seq": fpisa_seq_allreduce,
-    "switch_emu": switch_emu_allreduce,
-}
-
-
 # ---------------------------------------------------------------------------
 # stacked (logical-worker) aggregation — elastic fault tolerance (DESIGN.md §8)
 # ---------------------------------------------------------------------------
@@ -628,82 +592,199 @@ def stacked_switch_emu_allreduce(x, axis_names: Sequence[str], cfg: AggConfig):
     return out.reshape(x.shape[1:]).astype(x.dtype)
 
 
-STACKED_STRATEGIES = {
-    "native": stacked_native_allreduce,
-    "switchml": stacked_switchml_allreduce,
-    "fpisa": stacked_fpisa_allreduce,
-    "fpisa_seq": stacked_fpisa_seq_allreduce,
-    "switch_emu": stacked_switch_emu_allreduce,
-}
+# ---------------------------------------------------------------------------
+# split-phase pipeline factories (bucketer hooks, DESIGN.md §3/§5)
+# ---------------------------------------------------------------------------
 
 
-def stacked_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
-    """Aggregate ``x`` (leading logical-worker axis, see section doc) over
-    that axis AND the named mesh axes."""
-    if cfg.chunk_elems:
-        raise NotImplementedError(
-            "chunk_elems is not supported with stacked (logical-worker) "
-            "aggregation; use bucket_bytes to bound transient memory instead")
-    return STACKED_STRATEGIES[cfg.strategy](x, tuple(axis_names), cfg)
+def _fpisa_flat_phases(axes, cfg: AggConfig, backend: str):
+    """(encode, collect, finish) for the flat single-level fpisa path —
+    mirrors ``fpisa_allreduce`` exactly (bucket buffers are already block
+    multiples, so its pad step is a no-op here)."""
+    w = _axis_size(axes)
+    shift = _wire_shift(cfg.fmt, w, cfg.wire_bits)
+
+    def encode(flat):
+        man, bmax = _encode_align(flat, axes, shift, cfg, backend)
+        return _wire_cast(man, cfg.wire_bits), bmax
+
+    def collect(state):
+        man, bmax = state
+        return lax.psum(man, axes), bmax
+
+    def finish(state):
+        man_sum, bmax = state
+        return _decode(man_sum, bmax, shift, cfg, backend)
+
+    return encode, collect, finish
 
 
-def stacked_allreduce_tree(tree, axis_names: Sequence[str], cfg: AggConfig):
-    """``allreduce_tree`` for per-logical-worker gradient stacks.
+def _fpisa_hier_phases(data_axis, pod_axis, cfg: AggConfig, backend: str,
+                       stripe: int):
+    """(encode, collect, finish) for the hierarchical fpisa path.
 
-    With ``cfg.bucket_bytes`` the pytree streams through the same block-
-    aligned wire buckets as the per-leaf path (core/bucketer.py) — the plan is
-    derived from the traced per-worker leaf shapes and the CURRENT mesh, so a
-    post-failure re-trace on the survivor mesh re-plans automatically."""
-    if cfg.bucket_bytes:
-        from repro.core import bucketer
+    ``stripe`` rotates the in-pod reduce-scatter shard assignment of this
+    bucket by whole shards (a block-multiple roll): bucket i's cross-pod hop
+    and delayed renorm for any given gradient range land on data-rank
+    (rank + i) % w_data, striping consecutive buckets' DCI traffic across the
+    pod axis's uplinks. Rolling by whole shards keeps every block's contents
+    intact, so the result is bit-identical to the unstriped path.
+    """
+    w_data = compat.axis_size(data_axis)
+    w_pod = compat.axis_size(pod_axis)
+    shift = _wire_shift(cfg.fmt, w_data * w_pod, cfg.wire_bits)
+    quantum = cfg.block * w_data
 
-        return bucketer.bucketed_stacked_allreduce_tree(tree, axis_names, cfg)
-    return jax.tree_util.tree_map(
-        lambda g: stacked_allreduce(g, axis_names, cfg), tree)
+    def encode(flat):
+        pad = (-flat.shape[0]) % quantum
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        roll = (stripe % w_data) * (flat.shape[0] // w_data)
+        if roll:
+            flat = jnp.roll(flat, -roll)
+        man, bmax = _encode_align(
+            flat, (data_axis, pod_axis), shift, cfg, backend)
+        return man, bmax, pad, roll
+
+    def collect(state):
+        man, bmax, pad, roll = state
+        man_shard, pod_shift = _hier_collect(man, data_axis, pod_axis, cfg, shift)
+        return man_shard, bmax, pod_shift, pad, roll
+
+    def finish(state):
+        man_shard, bmax, pod_shift, pad, roll = state
+        out = _hier_finish(man_shard, bmax, shift, pod_shift, data_axis,
+                           cfg, backend)
+        if roll:
+            out = jnp.roll(out, roll)
+        if pad:
+            out = out[:out.shape[0] - pad]
+        return out
+
+    return encode, collect, finish
+
+
+def _fpisa_stacked_phases(axes, cfg: AggConfig, backend: str, k: int):
+    """(encode, collect, finish) for the stacked flat fpisa path — mirrors
+    ``stacked_fpisa_allreduce``: per-worker encode + exact local int fold
+    before the wire, W-derived shift, one delayed renorm after the psum."""
+    w = k * _axis_size(axes)
+    shift = _wire_shift(cfg.fmt, w, cfg.wire_bits)
+
+    def encode(buf):  # (k, elems) packed FP
+        man, bmax = _encode_align_stacked(buf, axes, shift, cfg, backend)
+        man = _wire_cast(man, cfg.wire_bits)
+        local = _wire_cast(jnp.sum(man.astype(jnp.int32), axis=0),
+                           cfg.wire_bits)
+        return local, bmax
+
+    def collect(state):
+        man, bmax = state
+        return lax.psum(man, axes), bmax
+
+    def finish(state):
+        man_sum, bmax = state
+        return _decode(man_sum, bmax, shift, cfg, backend)
+
+    return encode, collect, finish
+
+
+# ---------------------------------------------------------------------------
+# registry (repro.core.agg) — the declarative strategy table. Capability
+# flags are validated once at Aggregator construction; the bucketer pulls the
+# split-phase pipeline hooks and staging dtypes from the same specs.
+# ---------------------------------------------------------------------------
+
+
+def _validate_switch_emu(cfg: AggConfig) -> None:
+    if cfg.fmt_name != "fp32":
+        raise ValueError(
+            "switch_emu runs on the jax-free numpy dataplane, which is "
+            f"fp32-only; got fmt_name={cfg.fmt_name!r}")
+
+
+def _stage_native(cfg: AggConfig, group: str):
+    return jnp.dtype(group)  # native psums in the leaf dtype
+
+
+def _stage_packed(cfg: AggConfig, group: str):
+    return _PACKED[cfg.fmt_name]
+
+
+register_strategy(
+    "native", stacked=stacked_native_allreduce, chunk_noop=True,
+    stage_dtype=_stage_native,
+    description="plain float psum — the no-switch baseline",
+)(native_allreduce)
+
+register_strategy(
+    "switchml", stacked=stacked_switchml_allreduce,
+    description="SwitchML int32 fixed-point with a scale-factor round trip",
+)(switchml_allreduce)
+
+register_strategy(
+    "fpisa", stacked=stacked_fpisa_allreduce,
+    hierarchical=fpisa_allreduce_hierarchical,
+    stage_dtype=_stage_packed,
+    flat_phases=_fpisa_flat_phases, hier_phases=_fpisa_hier_phases,
+    stacked_phases=_fpisa_stacked_phases,
+    description="the paper's block-exponent integer planes (production path)",
+)(fpisa_allreduce)
+
+register_strategy(
+    "fpisa_seq", stacked=stacked_fpisa_seq_allreduce,
+    description="bit-faithful sequential switch-arrival FPISA-A",
+)(fpisa_seq_allreduce)
+
+register_strategy(
+    "switch_emu", stacked=stacked_switch_emu_allreduce,
+    requires_host_callback=True, validate=_validate_switch_emu,
+    description="validation via the batched switch-dataplane emulator",
+)(switch_emu_allreduce)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims — the legacy module-level surface. They delegate to the
+# Aggregator facade unchanged (same dispatch, bit for bit) and warn with the
+# CALLER attributed (stacklevel), so the suite can refuse in-tree use while
+# out-of-tree users keep working. New code: repro.core.agg.Aggregator.
+# ---------------------------------------------------------------------------
+
+
+def _facade_shim_warn(name: str) -> None:
+    warnings.warn(
+        f"repro.core.allreduce.{name}() is deprecated; construct a "
+        f"repro.core.agg.Aggregator once and call its methods instead",
+        DeprecationWarning, stacklevel=3)
 
 
 def allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
-    """Aggregate ``x`` over the named (manual/shard_map) mesh axes."""
-    if cfg.chunk_elems and cfg.strategy != "native" and x.size > cfg.chunk_elems:
-        return _chunked_allreduce(x, axis_names, cfg)
-    if cfg.strategy == "fpisa" and len(axis_names) == 2:
-        pod_axis, data_axis = axis_names[0], axis_names[1]
-        return fpisa_allreduce_hierarchical(x, data_axis, pod_axis, cfg)
-    return STRATEGIES[cfg.strategy](x, tuple(axis_names), cfg)
-
-
-def _chunked_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
-    """Stream the aggregation through fixed-size chunks (lax.scan) so the
-    integer planes of only ONE chunk are live at a time."""
-    inner = dataclasses.replace(cfg, chunk_elems=0)
-    orig_shape, orig_dtype = x.shape, x.dtype
-    flat = x.reshape(-1)
-    pad = (-flat.shape[0]) % cfg.chunk_elems
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    chunks = flat.reshape(-1, cfg.chunk_elems)
-
-    def body(_, c):
-        return None, allreduce(c, axis_names, inner).astype(orig_dtype)
-
-    _, out = lax.scan(body, None, chunks)
-    out = out.reshape(-1)
-    if pad:
-        out = out[:-pad]
-    return out.reshape(orig_shape).astype(orig_dtype)
+    """Deprecated shim: ``Aggregator(cfg, axis_names).allreduce(x)``."""
+    _facade_shim_warn("allreduce")
+    return _agg.Aggregator(cfg, axis_names).allreduce(x)
 
 
 def allreduce_tree(tree, axis_names: Sequence[str], cfg: AggConfig):
-    """Aggregate every leaf of a gradient pytree.
+    """Deprecated shim: ``Aggregator(cfg, axis_names).allreduce_tree(tree)``."""
+    _facade_shim_warn("allreduce_tree")
+    return _agg.Aggregator(cfg, axis_names).allreduce_tree(tree)
 
-    With ``cfg.bucket_bytes`` set, the whole pytree is flattened into
-    fixed-size block-aligned wire buckets and streamed double-buffered
-    (core/bucketer.py) — bit-identical to the per-leaf path but with the
-    per-collective encode/decode overhead amortized over whole buckets.
-    Otherwise: legacy per-leaf tree_map (XLA's latency-hiding scheduler still
-    overlaps the independent per-leaf collectives with other work)."""
-    if cfg.bucket_bytes:
-        from repro.core import bucketer
 
-        return bucketer.bucketed_allreduce_tree(tree, axis_names, cfg)
-    return jax.tree_util.tree_map(lambda g: allreduce(g, axis_names, cfg), tree)
+def stacked_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig):
+    """Deprecated shim: ``Aggregator(cfg, axis_names, stacked=True)
+    .allreduce(x)`` (leading logical-worker axis, see section doc)."""
+    _facade_shim_warn("stacked_allreduce")
+    if cfg.chunk_elems:
+        # preserved shim behavior: the facade refuses this at construction
+        # with ValueError; the legacy function raised NotImplementedError
+        raise NotImplementedError(
+            "chunk_elems is not supported with stacked (logical-worker) "
+            "aggregation; use bucket_bytes to bound transient memory instead")
+    return _agg.Aggregator(cfg, axis_names, stacked=True).allreduce(x)
+
+
+def stacked_allreduce_tree(tree, axis_names: Sequence[str], cfg: AggConfig):
+    """Deprecated shim: ``Aggregator(cfg, axis_names, stacked=True)
+    .allreduce_tree(tree)``."""
+    _facade_shim_warn("stacked_allreduce_tree")
+    return _agg.Aggregator(cfg, axis_names, stacked=True).allreduce_tree(tree)

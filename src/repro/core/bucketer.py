@@ -45,8 +45,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro import compat
-from repro.core import allreduce as ar
+from repro.core import agg as _agg
+from repro.core.agg import AggConfig
 
 
 def _ceil_to(n: int, q: int) -> int:
@@ -141,7 +141,7 @@ def make_plan(leaves: Sequence, *, block: int, bucket_bytes: int) -> BucketPlan:
                       buckets=tuple(buckets), passthrough=tuple(passthrough))
 
 
-def plan_for_config(leaves: Sequence, cfg: ar.AggConfig) -> BucketPlan:
+def plan_for_config(leaves: Sequence, cfg: AggConfig) -> BucketPlan:
     return make_plan(leaves, block=cfg.block, bucket_bytes=cfg.bucket_bytes)
 
 
@@ -150,14 +150,14 @@ def plan_for_config(leaves: Sequence, cfg: ar.AggConfig) -> BucketPlan:
 # ---------------------------------------------------------------------------
 
 
-def _stage_dtype(cfg: ar.AggConfig, group: str):
+def _stage_dtype(cfg: AggConfig, group: str):
     """Wire staging dtype of a bucket buffer — the same cast the per-leaf
     path applies to each leaf before aggregating (cast is elementwise, so
-    cast-then-concat == concat-then-cast)."""
-    if cfg.strategy == "native":
-        return jnp.dtype(group)  # native psums in the leaf dtype
-    if cfg.strategy == "fpisa":
-        return ar._PACKED[cfg.fmt_name]
+    cast-then-concat == concat-then-cast). Declared per strategy on its
+    registry spec (``StrategySpec.stage_dtype``); float32 by default."""
+    spec = _agg.get_strategy(cfg.strategy)
+    if spec.stage_dtype is not None:
+        return spec.stage_dtype(cfg, group)
     return jnp.float32  # switchml / fpisa_seq / switch_emu
 
 
@@ -186,82 +186,11 @@ def unpack_bucket(bucket: Bucket, out: jax.Array, pieces: dict) -> None:
 
 
 # ---------------------------------------------------------------------------
-# per-bucket dispatch: split-phase fpisa pipeline / generic strategy call
+# per-bucket dispatch: split-phase pipeline (registry hooks) / generic call
 # ---------------------------------------------------------------------------
 
 
-def _fpisa_flat_phases(axes, cfg: ar.AggConfig, backend: str):
-    """(encode, collect, finish) for the flat single-level fpisa path —
-    mirrors ``fpisa_allreduce`` exactly (bucket buffers are already block
-    multiples, so its pad step is a no-op here)."""
-    w = ar._axis_size(axes)
-    shift = ar._wire_shift(cfg.fmt, w, cfg.wire_bits)
-
-    def encode(flat):
-        man, bmax = ar._encode_align(flat, axes, shift, cfg, backend)
-        if cfg.wire_bits == 16:
-            man = man.astype(jnp.int16)
-        elif cfg.wire_bits == 8:
-            man = man.astype(jnp.int8)
-        return man, bmax
-
-    def collect(state):
-        man, bmax = state
-        return lax.psum(man, axes), bmax
-
-    def finish(state):
-        man_sum, bmax = state
-        return ar._decode(man_sum, bmax, shift, cfg, backend)
-
-    return encode, collect, finish
-
-
-def _fpisa_hier_phases(data_axis, pod_axis, cfg: ar.AggConfig, backend: str,
-                       stripe: int):
-    """(encode, collect, finish) for the hierarchical fpisa path.
-
-    ``stripe`` rotates the in-pod reduce-scatter shard assignment of this
-    bucket by whole shards (a block-multiple roll): bucket i's cross-pod hop
-    and delayed renorm for any given gradient range land on data-rank
-    (rank + i) % w_data, striping consecutive buckets' DCI traffic across the
-    pod axis's uplinks. Rolling by whole shards keeps every block's contents
-    intact, so the result is bit-identical to the unstriped path.
-    """
-    w_data = compat.axis_size(data_axis)
-    w_pod = compat.axis_size(pod_axis)
-    shift = ar._wire_shift(cfg.fmt, w_data * w_pod, cfg.wire_bits)
-    quantum = cfg.block * w_data
-
-    def encode(flat):
-        pad = (-flat.shape[0]) % quantum
-        if pad:
-            flat = jnp.pad(flat, (0, pad))
-        roll = (stripe % w_data) * (flat.shape[0] // w_data)
-        if roll:
-            flat = jnp.roll(flat, -roll)
-        man, bmax = ar._encode_align(
-            flat, (data_axis, pod_axis), shift, cfg, backend)
-        return man, bmax, pad, roll
-
-    def collect(state):
-        man, bmax, pad, roll = state
-        man_shard, pod_shift = ar._hier_collect(man, data_axis, pod_axis, cfg, shift)
-        return man_shard, bmax, pod_shift, pad, roll
-
-    def finish(state):
-        man_shard, bmax, pod_shift, pad, roll = state
-        out = ar._hier_finish(man_shard, bmax, shift, pod_shift, data_axis,
-                              cfg, backend)
-        if roll:
-            out = jnp.roll(out, roll)
-        if pad:
-            out = out[:out.shape[0] - pad]
-        return out
-
-    return encode, collect, finish
-
-
-def _stream_buckets(plan: BucketPlan, flat_leaves: dict, cfg: ar.AggConfig,
+def _stream_buckets(plan: BucketPlan, flat_leaves: dict, cfg: AggConfig,
                     pack_fn, phases_for, generic_fn) -> dict:
     """Double-buffered dispatch shared by the per-leaf and stacked tree
     entries: for each bucket the trace issues
@@ -313,10 +242,12 @@ def _reassemble(leaves, treedef, results: dict, pieces: dict, shape_of):
         treedef, [results[i] for i in range(len(leaves))])
 
 
-def bucketed_allreduce_tree(tree, axis_names: Sequence[str], cfg: ar.AggConfig):
+def bucketed_allreduce_tree(tree, axis_names: Sequence[str], cfg: AggConfig):
     """Aggregate a gradient pytree through fixed-size streamed wire buckets
-    with double-buffered dispatch (``_stream_buckets``); non-pipelined
-    strategies (and chunked fpisa) go through the one-shot ``allreduce``."""
+    with double-buffered dispatch (``_stream_buckets``). Strategies exposing
+    split-phase hooks on their registry spec (``flat_phases``/``hier_phases``)
+    pipeline encode/collective/decode; everything else (and chunked dispatch)
+    goes through the one-shot facade path with the same interleaving."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     if not leaves:
         return tree
@@ -326,14 +257,16 @@ def bucketed_allreduce_tree(tree, axis_names: Sequence[str], cfg: ar.AggConfig):
 
     results: dict[int, jax.Array] = {}
     for i in plan.passthrough:
-        results[i] = ar.allreduce(leaves[i], axes, inner)
+        results[i] = _agg._dispatch(leaves[i], axes, inner)
 
     planned = {s.leaf for b in plan.buckets for s in b.segments}
     flat_leaves = {i: jnp.ravel(leaves[i]) for i in planned}
 
-    hier = cfg.strategy == "fpisa" and len(axes) == 2
-    pipelined = cfg.strategy == "fpisa" and not cfg.chunk_elems
-    backend = ar.resolve_backend(cfg.backend)
+    spec = _agg.get_strategy(cfg.strategy)
+    hier = len(axes) == 2 and spec.hier_phases is not None
+    pipelined = not cfg.chunk_elems and (
+        spec.hier_phases is not None if hier else spec.flat_phases is not None)
+    backend = _agg.resolve_backend(cfg.backend)
     flat_phases = None
 
     def phases_for(bucket):
@@ -341,17 +274,17 @@ def bucketed_allreduce_tree(tree, axis_names: Sequence[str], cfg: ar.AggConfig):
         if not pipelined:
             return None
         if hier:
-            return _fpisa_hier_phases(axes[1], axes[0], cfg, backend,
-                                      stripe=bucket.index)
+            return spec.hier_phases(axes[1], axes[0], cfg, backend,
+                                    stripe=bucket.index)
         if flat_phases is None:
-            flat_phases = _fpisa_flat_phases(axes, cfg, backend)
+            flat_phases = spec.flat_phases(axes, cfg, backend)
         return flat_phases
 
     pieces = _stream_buckets(
         plan, flat_leaves, cfg,
         lambda bucket, dt: pack_bucket(bucket, flat_leaves, dt),
         phases_for,
-        lambda buf: ar.allreduce(buf, axes, inner))
+        lambda buf: _agg._dispatch(buf, axes, inner))
     return _reassemble(leaves, treedef, results, pieces, lambda l: l.shape)
 
 
@@ -360,33 +293,8 @@ def bucketed_allreduce_tree(tree, axis_names: Sequence[str], cfg: ar.AggConfig):
 # ---------------------------------------------------------------------------
 
 
-def _fpisa_stacked_phases(axes, cfg: ar.AggConfig, backend: str, k: int):
-    """(encode, collect, finish) for the stacked flat fpisa path — mirrors
-    ``stacked_fpisa_allreduce``: per-worker encode + exact local int fold
-    before the wire, W-derived shift, one delayed renorm after the psum."""
-    w = k * ar._axis_size(axes)
-    shift = ar._wire_shift(cfg.fmt, w, cfg.wire_bits)
-
-    def encode(buf):  # (k, elems) packed FP
-        man, bmax = ar._encode_align_stacked(buf, axes, shift, cfg, backend)
-        man = ar._wire_cast(man, cfg.wire_bits)
-        local = ar._wire_cast(jnp.sum(man.astype(jnp.int32), axis=0),
-                              cfg.wire_bits)
-        return local, bmax
-
-    def collect(state):
-        man, bmax = state
-        return lax.psum(man, axes), bmax
-
-    def finish(state):
-        man_sum, bmax = state
-        return ar._decode(man_sum, bmax, shift, cfg, backend)
-
-    return encode, collect, finish
-
-
 def bucketed_stacked_allreduce_tree(tree, axis_names: Sequence[str],
-                                    cfg: ar.AggConfig):
+                                    cfg: AggConfig):
     """``bucketed_allreduce_tree`` for per-logical-worker gradient stacks:
     every leaf carries a leading worker axis of size k and the reduction runs
     over that axis plus the mesh axes (core/allreduce.py stacked section).
@@ -409,21 +317,21 @@ def bucketed_stacked_allreduce_tree(tree, axis_names: Sequence[str],
 
     results: dict[int, jax.Array] = {}
     for i in plan.passthrough:
-        results[i] = ar.stacked_allreduce(leaves[i], axes, inner)
+        results[i] = _agg._dispatch_stacked(leaves[i], axes, inner)
 
     planned = {s.leaf for b in plan.buckets for s in b.segments}
     flat_leaves = {i: leaves[i].reshape(k, -1) for i in planned}
 
-    pipelined = cfg.strategy == "fpisa"
-    backend = ar.resolve_backend(cfg.backend)
+    spec = _agg.get_strategy(cfg.strategy)
+    backend = _agg.resolve_backend(cfg.backend)
     phases = None
 
     def phases_for(bucket):
         nonlocal phases
-        if not pipelined:
+        if spec.stacked_phases is None:
             return None
         if phases is None:
-            phases = _fpisa_stacked_phases(axes, cfg, backend, k)
+            phases = spec.stacked_phases(axes, cfg, backend, k)
         return phases
 
     pieces = _stream_buckets(
@@ -431,5 +339,5 @@ def bucketed_stacked_allreduce_tree(tree, axis_names: Sequence[str],
         lambda bucket, dt: jax.vmap(
             lambda fl: pack_bucket(bucket, fl, dt))(flat_leaves),
         phases_for,
-        lambda buf: ar.stacked_allreduce(buf, axes, inner))
+        lambda buf: _agg._dispatch_stacked(buf, axes, inner))
     return _reassemble(leaves, treedef, results, pieces, lambda l: l.shape[1:])

@@ -16,7 +16,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import SHAPES, get_config, shape_applicable, ARCH_NAMES  # noqa: E402
 from repro.configs.base import ShapeConfig  # noqa: E402
-from repro.core.allreduce import AggConfig  # noqa: E402
+from repro.core.agg import AggConfig, add_agg_args  # noqa: E402
 from repro.launch import hloscan  # noqa: E402
 from repro.launch import specs as S  # noqa: E402
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh  # noqa: E402
@@ -125,11 +125,11 @@ def active_param_count(cfg) -> float:
     return layers + emb
 
 
-def build_cell(arch: str, shape_name: str, mesh, agg_strategy: str = "fpisa",
-               overrides: dict | None = None, wire_bits: int = 32,
-               pod_wire_bits=None, agg_chunk: int = 0, agg_fmt: str = "fp32",
-               agg_backend: str = "auto", bucket_bytes: int = 0):
+def build_cell(arch: str, shape_name: str, mesh,
+               agg: AggConfig | None = None,
+               overrides: dict | None = None):
     """Returns (jitted fn, kwargs of ShapeDtypeStructs with shardings)."""
+    agg = agg or AggConfig()
     cfg = get_config(arch)
     if overrides:
         cfg = cfg.with_(**overrides)
@@ -166,10 +166,6 @@ def build_cell(arch: str, shape_name: str, mesh, agg_strategy: str = "fpisa",
                 o_sds.v, ospecs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
             ),
         )
-        agg = AggConfig(strategy=agg_strategy, wire_bits=wire_bits,
-                        pod_wire_bits=pod_wire_bits, chunk_elems=agg_chunk,
-                        fmt_name=agg_fmt, backend=agg_backend,
-                        bucket_bytes=bucket_bytes)
         step = make_train_step(model, mesh, agg, opt_cfg, shape.global_batch,
                                accum_steps=cfg.accum_steps)
         # donate params + optimizer state: in-place update, halves peak memory
@@ -191,11 +187,11 @@ def build_cell(arch: str, shape_name: str, mesh, agg_strategy: str = "fpisa",
     return fn, (p_shard, b_shard["tokens"], c_shard)
 
 
-def run_cell(arch: str, shape_name: str, multi_pod: bool, agg_strategy: str = "fpisa",
-             overrides: dict | None = None, save_hlo: str | None = None,
-             wire_bits: int = 32, pod_wire_bits=None, agg_chunk: int = 0,
-             agg_fmt: str = "fp32", agg_backend: str = "auto",
-             bucket_bytes: int = 0) -> dict:
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             agg: AggConfig | None = None,
+             overrides: dict | None = None,
+             save_hlo: str | None = None) -> dict:
+    agg = agg or AggConfig()
     mesh = make_production_mesh(multi_pod=multi_pod)
     nd = mesh.devices.size
     cfg = get_config(arch)
@@ -204,9 +200,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, agg_strategy: str = "f
     shape = SHAPES[shape_name]
     rec = {
         "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
-        "mesh": dict(mesh.shape), "agg": agg_strategy, "status": "ok",
-        "overrides": overrides or {}, "wire_bits": wire_bits,
-        "pod_wire_bits": pod_wire_bits,
+        "mesh": dict(mesh.shape), "agg": agg.strategy, "status": "ok",
+        "overrides": overrides or {}, "wire_bits": agg.wire_bits,
+        "pod_wire_bits": agg.pod_wire_bits,
     }
     if not shape_applicable(cfg, shape):
         rec["status"] = "skipped"
@@ -215,9 +211,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, agg_strategy: str = "f
     t0 = time.time()
     try:
         jax.sharding.set_mesh(mesh)  # enables in-model sharding hints
-        fn, args = build_cell(arch, shape_name, mesh, agg_strategy, overrides,
-                              wire_bits, pod_wire_bits, agg_chunk, agg_fmt,
-                              agg_backend, bucket_bytes)
+        fn, args = build_cell(arch, shape_name, mesh, agg, overrides)
         lowered = fn.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -277,16 +271,8 @@ def main():
     ap.add_argument("--arch", default=None, help="arch id or 'all'")
     ap.add_argument("--shape", default=None, help="shape name or 'all'")
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--agg", default="fpisa")
-    ap.add_argument("--wire-bits", type=int, default=32)
-    ap.add_argument("--pod-wire-bits", type=int, default=None)
-    ap.add_argument("--agg-chunk", type=int, default=0)
-    ap.add_argument("--agg-fmt", default="fp32")
-    ap.add_argument("--agg-backend", default="auto", choices=["auto", "jnp", "pallas"],
-                    help="encode/decode transform backend (core/allreduce.py)")
-    ap.add_argument("--bucket-bytes", type=int, default=0,
-                    help="bucketed tree aggregation: wire-bucket size in bytes "
-                         "(core/bucketer.py; 0 = per-leaf)")
+    add_agg_args(ap)  # shared --agg-* flags (repro.core.agg); --wire-bits /
+    #                   --pod-wire-bits / --agg kept as aliases
     ap.add_argument("--out", default=None, help="append JSON lines here")
     ap.add_argument("--save-hlo", default=None)
     ap.add_argument("--override", action="append", default=[],
@@ -303,14 +289,16 @@ def main():
         except (ValueError, SyntaxError):
             overrides[k] = v
 
+    try:
+        agg = AggConfig.from_args(args)
+    except ValueError as e:
+        ap.error(str(e))
     archs = ARCH_NAMES if args.arch in (None, "all") else [args.arch]
     shapes = list(SHAPES) if args.shape in (None, "all") else [args.shape]
     for arch in archs:
         for shape in shapes:
-            rec = run_cell(arch, shape, args.multi_pod, args.agg,
-                           overrides or None, args.save_hlo,
-                           args.wire_bits, args.pod_wire_bits, args.agg_chunk,
-                           args.agg_fmt, args.agg_backend, args.bucket_bytes)
+            rec = run_cell(arch, shape, args.multi_pod, agg,
+                           overrides or None, args.save_hlo)
             line = json.dumps(rec)
             print(line, flush=True)
             if args.out:

@@ -15,7 +15,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, get_smoke_config
-from repro.core.allreduce import AggConfig
+from repro.core.agg import AggConfig, add_agg_args
 from repro.data.pipeline import ShardedLoader, SyntheticCorpus
 from repro.models.registry import build, param_count
 from repro.optim import optimizers
@@ -27,12 +27,21 @@ from repro.train.step import make_train_step
 
 
 def train_loop(cfg, *, steps: int, global_batch: int, seq_len: int,
+               agg: AggConfig | None = None,
                agg_strategy: str = "fpisa", agg_backend: str = "auto",
                agg_chunk: int = 0, agg_bucket_bytes: int = 0,
                ckpt_dir: str | None = None,
                ckpt_every: int = 50, mesh=None, log_every: int = 10,
                opt_overrides: dict | None = None, seed: int = 0):
+    """Plain (non-elastic) training loop.
+
+    Aggregation is configured by ONE ``AggConfig`` (``agg``); the loose
+    ``agg_*`` keyword args are retained for backwards compatibility and are
+    ignored when ``agg`` is given."""
     mesh = mesh or make_mesh_for()
+    if agg is None:
+        agg = AggConfig(strategy=agg_strategy, backend=agg_backend,
+                        chunk_elems=agg_chunk, bucket_bytes=agg_bucket_bytes)
     model = build(cfg)
     opt_kw = {"name": cfg.optimizer, "lr": cfg.learning_rate}
     opt_kw.update(opt_overrides or {})
@@ -75,15 +84,13 @@ def train_loop(cfg, *, steps: int, global_batch: int, seq_len: int,
             start_step = latest + 1
             print(f"[train] resumed from step {latest}")
 
-    agg = AggConfig(strategy=agg_strategy, backend=agg_backend,
-                    chunk_elems=agg_chunk, bucket_bytes=agg_bucket_bytes)
     step_fn = jax.jit(make_train_step(model, mesh, agg, opt_cfg, global_batch))
     loader = ShardedLoader(SyntheticCorpus(cfg.vocab_size, seed), global_batch, seq_len)
     bspec = rules.batch_pspec(mesh, global_batch)
     health = HealthMonitor(hosts=[0])
 
     print(f"[train] {cfg.name}: {param_count(params)/1e6:.1f}M params, "
-          f"mesh={dict(mesh.shape)}, agg={agg_strategy}")
+          f"mesh={dict(mesh.shape)}, agg={agg.strategy}")
     history = []
     for step in range(start_step, steps):
         t0 = time.time()
@@ -113,21 +120,7 @@ def main():
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
-    ap.add_argument("--agg", default="fpisa",
-                    choices=["native", "fpisa", "switchml", "fpisa_seq",
-                             "switch_emu"])
-    ap.add_argument("--agg-backend", default="auto",
-                    choices=["auto", "jnp", "pallas"],
-                    help="pre/post-collective transform backend (fused Pallas "
-                         "kernels on TPU; pure jnp elsewhere)")
-    ap.add_argument("--agg-chunk", type=int, default=0,
-                    help="stream the aggregation through chunks of this many "
-                         "elements (bounds transient plane memory; 0 = off)")
-    ap.add_argument("--bucket-bytes", type=int, default=0,
-                    help="flatten the gradient pytree into fixed-size block-"
-                         "aligned wire buckets dispatched double-buffered "
-                         "(core/bucketer.py; bit-identical to per-leaf; "
-                         "0 = per-leaf tree_map)")
+    add_agg_args(ap)  # the shared --agg-* flags (repro.core.agg)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--fault-plan", default="",
@@ -143,24 +136,24 @@ def main():
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    try:
+        agg = AggConfig.from_args(args)
+    except ValueError as e:
+        ap.error(str(e))
     if args.fault_plan or args.num_hosts:
-        if args.agg_chunk:
+        if agg.chunk_elems:
             ap.error("--agg-chunk is not supported on the elastic controller "
                      "path (stacked aggregation; use --bucket-bytes instead)")
         from repro.runtime.controller import run_controller
 
         run_controller(cfg, steps=args.steps, global_batch=args.global_batch,
-                       seq_len=args.seq_len, agg_strategy=args.agg,
-                       agg_backend=args.agg_backend,
-                       agg_bucket_bytes=args.bucket_bytes,
+                       seq_len=args.seq_len, agg=agg,
                        num_hosts=args.num_hosts, ckpt_dir=args.ckpt_dir,
                        ckpt_every=args.ckpt_every,
                        fault_plan=args.fault_plan)
         return
     train_loop(cfg, steps=args.steps, global_batch=args.global_batch,
-               seq_len=args.seq_len, agg_strategy=args.agg,
-               agg_backend=args.agg_backend, agg_chunk=args.agg_chunk,
-               agg_bucket_bytes=args.bucket_bytes,
+               seq_len=args.seq_len, agg=agg,
                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
 
 

@@ -56,7 +56,7 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import switchsim
-from repro.core.allreduce import AggConfig
+from repro.core.agg import AggConfig, Aggregator
 from repro.data.pipeline import ShardedLoader, SyntheticCorpus, reassign_shard
 from repro.models.registry import build, param_count
 from repro.optim import optimizers
@@ -161,6 +161,12 @@ class ElasticController:
         self.global_batch = global_batch
         self.seq_len = seq_len
         self.agg = agg
+        # validate the aggregation config through the facade ONCE, up front:
+        # the controller always re-meshes onto data-only meshes and runs the
+        # stacked (logical-worker) collectives, so a strategy that cannot
+        # stack — or any bad strategy/backend/chunk combination — fails here,
+        # not deep inside the first re-trace after a failure
+        self.aggregator = Aggregator(agg, ("data",), stacked=True)
         self.devices = jax.devices()
         self.num_hosts = num_hosts or len(self.devices)
         if self.num_hosts > len(self.devices):
@@ -481,13 +487,18 @@ class ElasticController:
         return resumed_from
 
 
-def run_controller(cfg, *, steps, global_batch, seq_len, agg_strategy="fpisa",
+def run_controller(cfg, *, steps, global_batch, seq_len,
+                   agg: AggConfig | None = None, agg_strategy="fpisa",
                    agg_backend="auto", agg_bucket_bytes=0, num_hosts=None,
                    ckpt_dir=None, ckpt_every=5, fault_plan="", seed=0,
                    log_every=10, opt_overrides=None) -> dict:
-    """Launcher-facing wrapper (launch/train.py ``--fault-plan`` path)."""
-    agg = AggConfig(strategy=agg_strategy, backend=agg_backend,
-                    bucket_bytes=agg_bucket_bytes)
+    """Launcher-facing wrapper (launch/train.py ``--fault-plan`` path).
+
+    Prefer passing one ``agg`` config; the loose ``agg_*`` kwargs are kept
+    for backwards compatibility and ignored when ``agg`` is given."""
+    if agg is None:
+        agg = AggConfig(strategy=agg_strategy, backend=agg_backend,
+                        bucket_bytes=agg_bucket_bytes)
     ctl = ElasticController(
         cfg, steps=steps, global_batch=global_batch, seq_len=seq_len, agg=agg,
         num_hosts=num_hosts, ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,

@@ -5,6 +5,15 @@ with per-slot position tracking; a jitted prefill fills a fresh slot's cache
 region and a jitted decode step advances all active slots. Slot caches are
 per-request here (simple static batching); the dry-run decode shapes exercise
 the same decode_step the engine uses.
+
+Aggregation facade: the engine accepts the same ``AggConfig`` as the training
+stack (``repro.core.agg``). When given, per-batch serving telemetry (request
+and generated-token counts) is reduced across the data axis through ONE
+:class:`~repro.core.agg.Aggregator` — the in-network aggregation point the
+paper also targets for telemetry/queries (cf. ``db/query.py``) — so the
+serving path exercises exactly the facade the trainers use, and a typo'd
+``--agg-strategy`` fails at engine construction with the registered options,
+not mid-request.
 """
 from __future__ import annotations
 
@@ -14,6 +23,10 @@ from typing import Callable, List
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.agg import AggConfig, Aggregator
 
 
 @dataclasses.dataclass
@@ -34,19 +47,53 @@ class ServeEngine:
     prefills them together, then decodes greedily until all finish."""
 
     def __init__(self, model, params, batch_size: int, max_len: int,
-                 sampler: str = "greedy"):
+                 sampler: str = "greedy", agg: AggConfig | None = None,
+                 mesh=None):
         self.model = model
         self.params = params
         self.batch_size = batch_size
         self.max_len = max_len
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
+        # telemetry aggregated through the facade (module doc): totals of
+        # [requests, generated tokens] reduced over the data axis per batch
+        self.telemetry = {"requests": 0, "tokens_generated": 0, "batches": 0}
+        self.aggregator = None
+        if agg is not None:
+            self._mesh = mesh or compat.make_mesh(
+                (jax.device_count(),), ("data",))
+            # the ONE facade instance for the serving path — strategy/backend
+            # lookup and capability validation happen here, at engine build
+            self.aggregator = Aggregator(agg, ("data",))
+            self._agg_telemetry = jax.jit(compat.shard_map(
+                lambda rows: self.aggregator.allreduce(rows[0]),
+                mesh=self._mesh, in_specs=P("data", None), out_specs=P(),
+                check_vma=False))
 
     def run(self, requests: List[Request]) -> List[Result]:
         out: List[Result] = []
         for i in range(0, len(requests), self.batch_size):
             out.extend(self._run_batch(requests[i : i + self.batch_size]))
         return out
+
+    def _record_telemetry(self, reqs: List[Request], results: List[Result]):
+        """Fold one batch into the running totals — through the aggregation
+        facade when configured (each data-axis shard contributes its share of
+        the batch, exactly like gradient shards), host-side otherwise."""
+        n_req = len(reqs)
+        n_tok = sum(len(r.tokens) for r in results)
+        if self.aggregator is not None:
+            d = self._mesh.devices.size
+            rows = np.zeros((d, 2), np.float32)
+            for j in range(n_req):  # request j's stats live on shard j % d
+                rows[j % d] += (1.0, len(results[j].tokens))
+            agg_req, agg_tok = np.asarray(self._agg_telemetry(jnp.asarray(rows)))
+            # round, don't truncate: narrow-wire strategies quantize (8.0 can
+            # come back 7.9999995) and int() would undercount permanently
+            n_req, n_tok = int(round(float(agg_req))), int(round(float(agg_tok)))
+        self.telemetry["requests"] += n_req
+        self.telemetry["tokens_generated"] += n_tok
+        self.telemetry["batches"] += 1
 
     def _run_batch(self, reqs: List[Request]) -> List[Result]:
         b = len(reqs)
@@ -65,7 +112,9 @@ class ServeEngine:
             new = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
             gen.append(new)
         gen_np = np.concatenate([np.asarray(g) for g in gen], axis=1)
-        return [
+        results = [
             Result(rid=r.rid, tokens=gen_np[j, : r.max_new_tokens])
             for j, r in enumerate(reqs)
         ]
+        self._record_telemetry(reqs, results)
+        return results

@@ -52,7 +52,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core.allreduce import AggConfig, allreduce_tree, stacked_allreduce_tree
+from repro.core.agg import AggConfig, Aggregator
 from repro.optim import optimizers
 from repro.sharding import rules
 
@@ -120,6 +120,9 @@ def make_train_step(model, mesh: Mesh, agg: AggConfig, opt_cfg: optimizers.OptCo
     if boundary and agg.strategy != "native":
         batch_axes = rules.batch_axes(mesh, global_batch)
         manual_batch_axes = tuple(a for a in batch_axes if a in boundary)
+        # the ONE facade instance for this step: strategy/backend resolution
+        # and capability validation happen here, before anything is traced
+        aggregator = Aggregator(agg, boundary, stacked=bool(logical_workers))
 
         if logical_workers:
             def sharded_grads(params, batch):
@@ -139,7 +142,7 @@ def make_train_step(model, mesh: Mesh, agg: AggConfig, opt_cfg: optimizers.OptCo
                     jax.tree.map(split, batch))
                 # stacked integer-domain aggregation over (worker, mesh) —
                 # bit-identical on any mesh dividing W (core/allreduce.py)
-                grads = stacked_allreduce_tree(grads, boundary, agg)
+                grads = aggregator.allreduce_tree(grads)
                 # fixed-order loss reduction: the gathered (W,) vector has the
                 # same shape and order on every mesh. The sum MUST be a scan —
                 # a jnp.sum here gets pattern-matched into a cross-device
@@ -153,7 +156,7 @@ def make_train_step(model, mesh: Mesh, agg: AggConfig, opt_cfg: optimizers.OptCo
             def sharded_grads(params, batch):
                 loss, grads = grads_and_loss(params, batch)
                 # per-leaf or bucketed per agg.bucket_bytes (core/bucketer.py)
-                grads = allreduce_tree(grads, boundary, agg)
+                grads = aggregator.allreduce_tree(grads)
                 loss = jax.lax.pmean(loss, boundary)
                 return loss, grads
 

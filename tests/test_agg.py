@@ -1,0 +1,353 @@
+"""Aggregator facade + strategy registry (repro.core.agg).
+
+Covers the registry round-trip (register -> construct -> dispatch ->
+unregister), construction-time capability validation, the named-options /
+nearest-match error surface, the shared CLI pair (add_agg_args /
+AggConfig.from_args), deprecation-shim behavior, and a parity sweep pinning
+``Aggregator`` bit-identical to the legacy module-level functions for every
+strategy x backend x stacked x bucketed combination (in-process at W=1; the
+8-device mesh sweep runs in a subprocess per the project brief).
+"""
+import argparse
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import agg as AG
+from repro.core import allreduce as AR
+from repro.core.agg import (
+    AggConfig, Aggregator, add_agg_args, available_strategies, get_strategy,
+    register_strategy, resolve_backend, unregister_strategy,
+)
+
+STRATS = ("native", "switchml", "fpisa", "fpisa_seq", "switch_emu")
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_builtins_registered():
+    assert set(STRATS) <= set(available_strategies())
+    spec = get_strategy("fpisa")
+    assert spec.supports_stacking and spec.supports_hierarchical
+    assert spec.flat_phases and spec.hier_phases and spec.stacked_phases
+    assert not spec.requires_host_callback
+    assert get_strategy("switch_emu").requires_host_callback
+    assert get_strategy("native").chunk_noop
+
+
+def test_registry_roundtrip_register_construct_dispatch():
+    """A new strategy registered declaratively is immediately dispatchable
+    through the facade — the NetFC-style plug-in path."""
+
+    @register_strategy("_test_double", description="2x psum (test only)")
+    def double_allreduce(x, axes, cfg):
+        return lax.psum(x, axes) * 2.0
+
+    try:
+        assert "_test_double" in available_strategies()
+        agg = Aggregator(AggConfig(strategy="_test_double"), ("data",))
+        mesh = compat.make_mesh((1,), ("data",))
+        x = jnp.arange(8, dtype=jnp.float32)
+        out = jax.jit(compat.shard_map(agg.allreduce, mesh=mesh,
+                                       in_specs=P(), out_specs=P(),
+                                       check_vma=False))(x)
+        np.testing.assert_array_equal(np.asarray(out), np.arange(8) * 2.0)
+        # ... and allreduce_tree reaches the same registered fn per leaf
+        tree_out = jax.jit(compat.shard_map(
+            agg.allreduce_tree, mesh=mesh, in_specs=({"a": P()},),
+            out_specs={"a": P()}, check_vma=False))({"a": x})
+        np.testing.assert_array_equal(np.asarray(tree_out["a"]),
+                                      np.arange(8) * 2.0)
+    finally:
+        unregister_strategy("_test_double")
+    assert "_test_double" not in available_strategies()
+
+
+def test_duplicate_registration_refused():
+    def fn(x, axes, cfg):
+        return x
+
+    register_strategy("_test_dup")(fn)
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            register_strategy("_test_dup")(fn)
+        register_strategy("_test_dup", overwrite=True)(fn)  # explicit wins
+    finally:
+        unregister_strategy("_test_dup")
+
+
+# ---------------------------------------------------------------------------
+# error surface: named options + nearest match
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_strategy_names_options_and_nearest():
+    with pytest.raises(ValueError) as ei:
+        get_strategy("fpsia")
+    msg = str(ei.value)
+    for s in STRATS:
+        assert s in msg
+    assert "did you mean 'fpisa'" in msg
+    # the same error surfaces from Aggregator construction
+    with pytest.raises(ValueError, match="did you mean 'fpisa'"):
+        Aggregator(AggConfig(strategy="fpsia"), ("data",))
+
+
+def test_unknown_backend_names_options_and_nearest():
+    with pytest.raises(ValueError) as ei:
+        resolve_backend("palas")
+    msg = str(ei.value)
+    assert "auto" in msg and "jnp" in msg and "pallas" in msg
+    assert "did you mean 'pallas'" in msg
+    with pytest.raises(ValueError, match="did you mean 'pallas'"):
+        AggConfig(backend="palas")
+
+
+# ---------------------------------------------------------------------------
+# capability validation at construction (not deep in dispatch)
+# ---------------------------------------------------------------------------
+
+
+def test_stacked_plus_chunk_refused_at_construction():
+    with pytest.raises(ValueError, match="stacked"):
+        Aggregator(AggConfig(chunk_elems=512), ("data",), stacked=True)
+
+
+def test_switch_emu_fmt_validated_at_construction():
+    with pytest.raises(ValueError, match="fp32-only"):
+        Aggregator(AggConfig(strategy="switch_emu", fmt_name="bf16"), ("data",))
+    Aggregator(AggConfig(strategy="switch_emu"), ("data",))  # fp32 fine
+
+
+def test_unsupported_capabilities_refused_at_construction():
+    register_strategy("_test_rigid", supports_chunking=False,
+                      description="no chunking, no stacking")(
+        lambda x, axes, cfg: lax.psum(x, axes))
+    try:
+        with pytest.raises(ValueError, match="chunk_elems"):
+            Aggregator(AggConfig(strategy="_test_rigid", chunk_elems=256),
+                       ("data",))
+        with pytest.raises(ValueError, match="stacked"):
+            Aggregator(AggConfig(strategy="_test_rigid"), ("data",),
+                       stacked=True)
+        Aggregator(AggConfig(strategy="_test_rigid"), ("data",))  # plain ok
+    finally:
+        unregister_strategy("_test_rigid")
+
+
+def test_bucketed_chunk_alignment_validated():
+    ok = AggConfig(strategy="fpisa", bucket_bytes=8192, chunk_elems=2048)
+    Aggregator(ok, ("data",))
+    bad = AggConfig(strategy="fpisa", bucket_bytes=8192, chunk_elems=1000)
+    with pytest.raises(ValueError, match="multiple of block"):
+        Aggregator(bad, ("data",))
+
+
+# ---------------------------------------------------------------------------
+# shared CLI pair
+# ---------------------------------------------------------------------------
+
+
+def test_add_agg_args_from_args_roundtrip():
+    ap = argparse.ArgumentParser()
+    add_agg_args(ap)
+    ns = ap.parse_args([
+        "--agg-strategy", "switchml", "--agg-backend", "jnp",
+        "--agg-chunk", "512", "--bucket-bytes", "4096",
+        "--agg-wire-bits", "16", "--agg-fmt", "fp32"])
+    cfg = AggConfig.from_args(ns)
+    assert cfg == AggConfig(strategy="switchml", backend="jnp",
+                            chunk_elems=512, bucket_bytes=4096, wire_bits=16)
+
+
+def test_add_agg_args_legacy_aliases():
+    ap = argparse.ArgumentParser()
+    add_agg_args(ap)
+    ns = ap.parse_args(["--agg", "native", "--wire-bits", "16",
+                        "--pod-wire-bits", "8"])
+    cfg = AggConfig.from_args(ns)
+    assert (cfg.strategy, cfg.wire_bits, cfg.pod_wire_bits) == ("native", 16, 8)
+
+
+def test_from_args_validates_with_nearest_match():
+    ap = argparse.ArgumentParser()
+    add_agg_args(ap)
+    with pytest.raises(ValueError, match="did you mean 'switchml'"):
+        AggConfig.from_args(ap.parse_args(["--agg-strategy", "swichml"]))
+    with pytest.raises(ValueError, match="did you mean 'jnp'"):
+        AggConfig.from_args(ap.parse_args(["--agg-backend", "jnpp"]))
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_module_functions_warn_and_delegate():
+    mesh = compat.make_mesh((1,), ("data",))
+    cfg = AggConfig(strategy="fpisa")
+    x = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal(1024).astype(np.float32))
+    agg = Aggregator(cfg, ("data",))
+    want = jax.jit(compat.shard_map(agg.allreduce, mesh=mesh, in_specs=P(),
+                                    out_specs=P(), check_vma=False))(x)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        got = jax.jit(compat.shard_map(
+            lambda v: AR.allreduce(v, ("data",), cfg), mesh=mesh,
+            in_specs=P(), out_specs=P(), check_vma=False))(x)
+        assert any(issubclass(i.category, DeprecationWarning) for i in w), \
+            "legacy allreduce() must raise DeprecationWarning"
+    assert np.array_equal(np.asarray(want).view(np.int32),
+                          np.asarray(got).view(np.int32))
+
+
+def test_facade_path_raises_no_deprecation_from_repro():
+    """The in-tree (facade + bucketer) path must be shim-free: any
+    DeprecationWarning attributed to a repro.* module is a bug (and the
+    pytest.ini filter turns it into an error suite-wide)."""
+    mesh = compat.make_mesh((1,), ("data",))
+    tree = {"a": jnp.ones((700,), jnp.float32),
+            "b": jnp.ones((64,), jnp.float32)}
+    agg = Aggregator(AggConfig(strategy="fpisa", bucket_bytes=4096), ("data",))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        jax.jit(compat.shard_map(
+            agg.allreduce_tree, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P(), tree),),
+            out_specs=jax.tree.map(lambda _: P(), tree),
+            check_vma=False))(tree)
+    dep = [i for i in w if issubclass(i.category, DeprecationWarning)
+           and "repro.core.allreduce" in str(i.message)]
+    assert not dep, [str(i.message) for i in dep]
+
+
+# ---------------------------------------------------------------------------
+# parity: facade == legacy module-level functions, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def _ragged_tree(rng):
+    return {f"l{i}": jnp.asarray(
+        (rng.standard_normal(n) * 0.01).astype(np.float32))
+        for i, n in enumerate((1500, 256, 77, 513))}
+
+
+@pytest.mark.parametrize("strategy", STRATS)
+@pytest.mark.parametrize("stacked", [False, True])
+@pytest.mark.parametrize("bucket_bytes", [0, 4096])
+def test_parity_facade_vs_legacy_w1(strategy, stacked, bucket_bytes):
+    """Aggregator results must equal the legacy module-level functions bit
+    for bit — every strategy x stacked x bucketed (W=1 in-process; the
+    multi-device sweep is the subprocess test below)."""
+    mesh = compat.make_mesh((1,), ("data",))
+    rng = np.random.default_rng(7)
+    tree = _ragged_tree(rng)
+    if stacked:  # leading logical-worker axis of k=2
+        tree = jax.tree_util.tree_map(
+            lambda v: jnp.stack([v, v * 0.5 + 0.001]), tree)
+    cfg = AggConfig(strategy=strategy, backend="jnp",
+                    bucket_bytes=bucket_bytes)
+    agg = Aggregator(cfg, ("data",), stacked=stacked)
+    legacy = AR.stacked_allreduce_tree if stacked else AR.allreduce_tree
+
+    def shmap(fn):
+        # out_specs only needs the pytree STRUCTURE (stacked outputs drop the
+        # leading worker axis but keep the same treedef)
+        return jax.jit(compat.shard_map(
+            fn, mesh=mesh, in_specs=(jax.tree.map(lambda _: P(), tree),),
+            out_specs=jax.tree.map(lambda _: P(), tree),
+            check_vma=False))
+
+    a = shmap(agg.allreduce_tree)(tree)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        b = shmap(lambda t: legacy(t, ("data",), cfg))(tree)
+    for k in a:
+        av, bv = np.asarray(a[k]), np.asarray(b[k])
+        assert np.array_equal(av.view(np.int32), bv.view(np.int32)), \
+            (strategy, stacked, bucket_bytes, k)
+
+
+MULTI_DEV_CODE = r"""
+import itertools, warnings
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.core import allreduce as AR
+from repro.core.agg import AggConfig, Aggregator
+
+rng = np.random.default_rng(0)
+mesh_flat = compat.make_mesh((8,), ("data",))
+mesh_hier = compat.make_mesh((2, 4), ("pod", "data"))
+tree = {f"l{i}": jnp.asarray(
+    (rng.standard_normal((8, n)) * 0.01).astype(np.float32))
+    for i, n in enumerate((1100, 300, 64))}
+
+def run(body, t, hier):
+    mesh = mesh_hier if hier else mesh_flat
+    axes = ("pod", "data") if hier else ("data",)
+    fn = jax.jit(compat.shard_map(
+        lambda s: body(jax.tree.map(lambda x: x[0], s), axes), mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P(axes if hier else "data"), t),),
+        out_specs=jax.tree.map(lambda _: P(), t), check_vma=False))
+    return {k: np.asarray(v) for k, v in
+            fn(jax.tree.map(lambda x: x.reshape((8, 1) + x.shape[1:]), t)).items()}
+
+def assert_equal(a, b, tag):
+    for k in a:
+        assert np.array_equal(a[k].view(np.int32), b[k].view(np.int32)), (tag, k)
+
+# flat + hierarchical meshes: facade == legacy. The numeric behavior of each
+# strategy is pinned exhaustively by the existing suites (test_allreduce,
+# test_bucketer, test_backend_parity); THIS sweep pins the facade's routing —
+# one representative combo per dispatch path (flat / bucketed / hierarchical
+# incl. narrow pod wire / host callback), each compiled twice (facade +
+# legacy shim), to keep the 8-device compile count bounded.
+combos = [  # (hier, strategy, bucket_bytes, pod_wire_bits)
+    (False, "native", 0, None), (False, "switchml", 0, None),
+    (False, "fpisa", 0, None), (False, "fpisa", 4096, None),
+    (False, "fpisa_seq", 0, None), (False, "switch_emu", 0, None),
+    (True, "fpisa", 0, None), (True, "fpisa", 4096, 16),
+]
+for hier, strat, bb, pw in combos:
+    cfg = AggConfig(strategy=strat, backend="jnp", bucket_bytes=bb,
+                    pod_wire_bits=pw)
+    a = run(lambda t, axes: Aggregator(cfg, axes).allreduce_tree(t),
+            tree, hier)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        b = run(lambda t, axes: AR.allreduce_tree(t, axes, cfg), tree, hier)
+    assert_equal(a, b, (strat, bb, hier, pw))
+
+# stacked (k=2 logical workers per shard, data-only mesh, W=16). The body
+# drops run()'s singleton shard dim so every leaf enters as (k=2, n).
+stree = jax.tree.map(lambda v: jnp.stack([v, v * 0.5], axis=1), tree)  # (8,2,n)
+unstack = lambda t: jax.tree.map(lambda v: v[0], t)
+for strat, bb in [("fpisa", 0), ("fpisa", 4096), ("switch_emu", 0)]:
+    cfg = AggConfig(strategy=strat, backend="jnp", bucket_bytes=bb)
+    a = run(lambda t, axes: Aggregator(cfg, axes, stacked=True)
+            .allreduce_tree(unstack(t)), stree, False)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        b = run(lambda t, axes: AR.stacked_allreduce_tree(unstack(t), axes, cfg),
+                stree, False)
+    assert_equal(a, b, (strat, bb, "stacked"))
+print("AGG_PARITY_OK")
+"""
+
+
+@pytest.mark.slow
+def test_parity_facade_vs_legacy_multi_device(multi_device_runner):
+    out = multi_device_runner(MULTI_DEV_CODE, n_devices=8, timeout=1800)
+    assert "AGG_PARITY_OK" in out
