@@ -1,0 +1,125 @@
+"""Contention figure (beyond-paper) — what sharing one switch costs each job.
+
+Two training jobs plus one query stream (``db.query.StreamedGroupBySum``)
+contend for a single emulated dataplane under QoS-aware slot admission
+(quota/weight/priority, DESIGN.md §10), versus each job running alone on an
+identical switch. Results in ``BENCH_contention.json``:
+
+* per-job goodput (payload elements delivered per driver round) shared vs
+  isolated, and the slowdown each job absorbs;
+* Jain's fairness index over the normalized goodputs (shared/isolated) —
+  1.0 means contention taxed every tenant equally;
+* per-job admission counters (packets, admission_denied, preempted) showing
+  HOW the arbiter resolved the contention;
+* the query stream's max relative group-sum error vs the exact
+  ``spark_like_groupby`` baseline (FPISA quantization only — sharing the
+  switch must not corrupt results).
+"""
+import numpy as np
+
+from benchmarks.common import emit, scaled, write_json
+
+ELEMS = 64
+DROP = 0.05
+NUM_SLOTS = 8
+PRIORITIES = (1, 0, 0)
+WEIGHTS = (2, 1, 1)
+
+
+def _goodput(elems: int, rounds: int) -> float:
+    return elems / max(rounds, 1)
+
+
+def run() -> None:
+    from repro import switchsim as ss
+    from repro.db import query as Q
+
+    rng = np.random.default_rng(0)
+    nchunks = scaled(256, 24)
+    nrows = scaled(200_000, 10_000)
+
+    # two training jobs: 4-worker gradient streams
+    train = [(rng.standard_normal((4, nchunks * ELEMS)) * 0.01)
+             .astype(np.float32) for _ in range(2)]
+    # one query stream: group-by partials, one packet per row batch
+    keys = rng.integers(0, 32, size=nrows)
+    values = (rng.standard_normal(nrows) * 3).astype(np.float32)
+    gb = Q.StreamedGroupBySum(num_groups=32, elems_per_packet=ELEMS)
+    qvec = gb.vectors(keys, values, batch=scaled(4096, 1024))
+    vectors = [train[0], train[1], qvec]
+
+    cfg = ss.DataplaneConfig(
+        num_workers=9, num_slots=NUM_SLOTS, elems_per_packet=ELEMS,
+        num_jobs=3, job_workers=(4, 4, 1),
+        job_priorities=PRIORITIES, job_weights=WEIGHTS)
+    flats, rep = ss.run_multitenant(
+        ss.BatchedDataplane(cfg), vectors, drop_prob=DROP, seed=1)
+
+    # isolated baselines: the same traffic, each job alone on its own switch
+    isolated_rounds = []
+    for v in vectors:
+        cfg1 = ss.DataplaneConfig(num_workers=v.shape[0],
+                                  num_slots=NUM_SLOTS, elems_per_packet=ELEMS)
+        dp = ss.BatchedDataplane(cfg1)
+        (_,), r1 = ss.run_multitenant(dp, [v], drop_prob=DROP, seed=1)
+        isolated_rounds.append(r1["done_round"][0])
+
+    jobs = []
+    normalized = []
+    for j, v in enumerate(vectors):
+        g_sh = _goodput(v.size, rep["done_round"][j])
+        g_iso = _goodput(v.size, isolated_rounds[j])
+        normalized.append(g_sh / g_iso)
+        s = rep["job_stats"][j]
+        jobs.append({
+            "job": j,
+            "kind": "query" if j == 2 else "train",
+            "workers": v.shape[0],
+            "elems": int(v.size),
+            "done_round_shared": rep["done_round"][j],
+            "done_round_isolated": isolated_rounds[j],
+            "goodput_shared_eps": g_sh,
+            "goodput_isolated_eps": g_iso,
+            "normalized_goodput": normalized[-1],
+            "packets": s["packets"],
+            "admission_denied": s["admission_denied"],
+            "preempted": s["preempted"],
+        })
+        emit(f"contention.job{j}_goodput", 0,
+             f"shared={g_sh:.0f}eps norm={normalized[-1]:.2f}")
+
+    # query-stream accuracy: sharing must cost quantization only
+    got = gb.finalize(flats[2])
+    want = Q.spark_like_groupby(keys, values)
+    max_rel_err = max(abs(got[k] - want[k]) / (abs(want[k]) + 1e-9)
+                      for k in want)
+
+    fairness = {
+        "jain_normalized": ss.jain_fairness(normalized),
+        "jain_shared": ss.jain_fairness(
+            [j["goodput_shared_eps"] for j in jobs]),
+    }
+    emit("contention.jain_normalized", 0,
+         f"index={fairness['jain_normalized']:.3f}")
+    emit("contention.query_max_rel_err", 0, f"err={max_rel_err:.2e}")
+
+    write_json("contention", {
+        "config": {
+            "num_jobs": 3,
+            "num_slots": NUM_SLOTS,
+            "drop_prob": DROP,
+            "priorities": list(PRIORITIES),
+            "weights": list(WEIGHTS),
+        },
+        "jobs": jobs,
+        "fairness": fairness,
+        "query": {"max_rel_err": max_rel_err, "num_groups": 32,
+                  "rows": int(nrows)},
+        "completed": all(d is not None for d in rep["done_round"]),
+        "rounds": rep["rounds"],
+    })
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

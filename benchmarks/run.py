@@ -16,6 +16,7 @@ MODULES = [
     "fig11_e2e_speedup",
     "fig13_queries",
     "fig_recovery",
+    "fig_contention",
     "tab3_resource_util",
     "roofline",
 ]

@@ -67,8 +67,21 @@ def _did_you_mean(name: str, options: Sequence[str]) -> str:
     return f"; did you mean {close[0]!r}?" if close else ""
 
 
+# Measured "auto" choice per jax platform. Pallas wins only where the fused
+# kernels actually beat jnp: on TPU the mosaic kernels fuse encode+align into
+# one VMEM pass; on CPU the Triton/interpreter path is ~2.2x SLOWER than jnp
+# (BENCH_roofline: fused 4.1 ms vs jnp 1.9 ms for the 16M-elem transform), so
+# auto must resolve to jnp there — regression-pinned by tests/test_agg.py.
+_AUTO_BACKEND = {
+    "tpu": "pallas",
+    "gpu": "jnp",  # pallas-on-gpu unmeasured here; jnp is the safe default
+    "cpu": "jnp",
+}
+
+
 def resolve_backend(backend: str) -> str:
-    """Map "auto" to the best backend for the current jax platform.
+    """Map "auto" to the measured-fastest backend for the current jax
+    platform (``_AUTO_BACKEND``; unlisted platforms fall back to jnp).
 
     Unknown names fail here with the valid options and the nearest match,
     not as a KeyError deep inside a traced function."""
@@ -77,7 +90,7 @@ def resolve_backend(backend: str) -> str:
             f"unknown aggregation backend {backend!r}; valid backends: "
             f"{', '.join(BACKENDS)}{_did_you_mean(backend, BACKENDS)}")
     if backend == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+        return _AUTO_BACKEND.get(jax.default_backend(), "jnp")
     return backend
 
 
@@ -110,12 +123,23 @@ class AggConfig:
     # every strategy stays bit-identical to the per-leaf path) and dispatch
     # them double-buffered. 0 = legacy per-leaf tree_map. See DESIGN.md §3.
     bucket_bytes: int = 0
+    # multi-tenant switch emulation (switch_emu only, DESIGN.md §10): name a
+    # process-shared emulated dataplane and this aggregator's tenant on it,
+    # so several jobs (plus query streams) contend for one switch. None =
+    # a private single-tenant dataplane per call (the default behavior).
+    switch_shared: str | None = None
+    switch_jobs: int = 1
+    switch_job: int = 0
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"backend must be one of {BACKENDS}, got {self.backend!r}"
                 f"{_did_you_mean(self.backend, BACKENDS)}")
+        if not 0 <= self.switch_job < self.switch_jobs:
+            raise ValueError(
+                f"switch_job must be in [0, switch_jobs={self.switch_jobs}), "
+                f"got {self.switch_job}")
 
     @property
     def fmt(self):

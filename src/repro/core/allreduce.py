@@ -405,7 +405,15 @@ def switch_emu_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig
     (``jax.pure_callback``). Exercises the full protocol machinery — slot
     claim/recycle, bitmaps, packetized streaming window — on a lossless
     fabric, so the result is bit-identical to ``fpisa_seq`` (worker-major
-    arrival order per chunk). See repro/switchsim/dataplane.py."""
+    arrival order per chunk). See repro/switchsim/dataplane.py.
+
+    With ``cfg.switch_shared`` set, the traffic instead rides the named
+    process-shared multi-tenant dataplane as tenant ``cfg.switch_job`` of
+    ``cfg.switch_jobs`` — several jobs' aggregators (plus query streams)
+    then contend for one emulated switch with QoS-aware slot admission
+    (repro/switchsim/tenancy.py, DESIGN.md §10). The aggregated bits are
+    unchanged: a lossless fabric delivers every result regardless of how
+    admission interleaves the claims."""
     if cfg.fmt_name != "fp32":
         raise ValueError(
             "switch_emu runs on the jax-free numpy dataplane, which is "
@@ -420,6 +428,10 @@ def switch_emu_allreduce(x: jax.Array, axis_names: Sequence[str], cfg: AggConfig
 
         # NumpyDataplane, NOT the jitted one: concurrent host callbacks that
         # re-enter jax deadlock the CPU client (see switchsim/npfpisa.py).
+        if cfg.switch_shared is not None:
+            return switchsim.shared_emulated_allreduce(
+                cfg.switch_shared, np.asarray(vals),
+                num_jobs=cfg.switch_jobs, job=cfg.switch_job)
         dp = switchsim.NumpyDataplane(switchsim.DataplaneConfig(
             num_workers=w, fmt_name="fp32", variant="fpisa_a"))
         return switchsim.run_aggregation(dp, np.asarray(vals)).astype(np.float32)
@@ -575,6 +587,11 @@ def stacked_switch_emu_allreduce(x, axis_names: Sequence[str], cfg: AggConfig):
         raise ValueError(
             "switch_emu runs on the jax-free numpy dataplane, which is "
             f"fp32-only; got fmt_name={cfg.fmt_name!r}")
+    if cfg.switch_shared is not None:
+        raise ValueError(
+            "switch_shared tenancy is wired for the flat switch_emu path; "
+            "the stacked (elastic logical-worker) variant does not support "
+            "a shared dataplane")
     axes = tuple(axis_names)
     w = x.shape[0] * _axis_size(axes)
     n = math.prod(x.shape[1:]) if x.ndim > 1 else 1

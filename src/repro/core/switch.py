@@ -75,21 +75,30 @@ class FpisaSwitch:
     @property
     def stats(self) -> dict:
         s = self._dp.stats
-        return {k: s[k] for k in ("packets", "duplicates", "stale",
-                                  "overwrite", "overflow", "reclaimed")}
+        return {k: s[k] for k in switchsim.dataplane.COUNTERS}
 
-    def reclaim_worker(self, worker: int):
+    @property
+    def job_stats(self) -> list:
+        """Per-tenant counters of the underlying dataplane."""
+        return self._dp.job_stats
+
+    def reclaim_worker(self, worker: int, job: int = 0):
         """Dead-worker reclamation (control plane): free the worker's parked
-        in-flight slots and waive its bitmap bit for future completions —
-        see repro/switchsim/dataplane.py \"Worker-failure reclamation\"."""
-        self._dp.reclaim_worker(worker)
+        in-flight slots owned by ``job`` and waive its bitmap bit for future
+        completions — see repro/switchsim/dataplane.py \"Worker-failure
+        reclamation\"."""
+        self._dp.reclaim_worker(worker, job)
 
-    def ingest(self, pkt: Packet) -> ResultPacket | None:
+    def ingest(self, pkt: Packet, job: int = 0, now: int = 0) -> ResultPacket | None:
         """Process one packet; returns the broadcast result when a slot fills,
         or re-serves the cached result for duplicate packets of a completed
-        chunk (idempotent exactly-once aggregation under retransmission)."""
+        chunk (idempotent exactly-once aggregation under retransmission).
+        ``job``/``now`` tag the packet's tenant and the driver's staleness
+        clock on a multi-tenant switch (defaults preserve the single-tenant
+        behavior bit for bit)."""
         ready, results, _ = self._dp.ingest_batch(
-            [pkt.worker], [pkt.chunk], pkt.payload[None, :])
+            [pkt.worker], [pkt.chunk], pkt.payload[None, :],
+            jobs=[job], now=now)
         if ready[0]:
             return ResultPacket(chunk=pkt.chunk, payload=results[0])
         return None

@@ -141,6 +141,56 @@ class GroupBySum:
         return {int(k): float(out[k]) for k in np.unique(keys)}
 
 
+class StreamedGroupBySum:
+    """Group-by sum riding a (possibly multi-tenant) switch *dataplane* as a
+    query stream (DESIGN.md §10): each row batch collapses worker-side into
+    one packet carrying the batch's per-group partial sums, the packets
+    contend for aggregation slots like any other tenant's traffic (a
+    single-port job: one chunk per row batch), and the master folds the
+    delivered partials into totals. This is the "query stream shares the
+    switch with training jobs" scenario — drive :meth:`vectors` through
+    ``switchsim.tenancy.run_multitenant`` as one of its jobs and hand the
+    returned flat vector to :meth:`finalize`.
+
+    Accuracy note: the switch round-trips each partial through FPISA
+    encode/decode (a W=1 slot completes on its single packet), so totals
+    carry one quantization per batch — ``benchmarks/fig_contention.py``
+    reports the max relative error vs ``spark_like_groupby``.
+    """
+
+    def __init__(self, num_groups: int, elems_per_packet: int = 256):
+        assert num_groups <= elems_per_packet, \
+            "per-batch partials must fit one packet"
+        self.num_groups = num_groups
+        self.elems_per_packet = elems_per_packet
+        self.stats = SwitchStats()
+
+    def vectors(self, keys: np.ndarray, values: np.ndarray,
+                batch: int = 4096) -> np.ndarray:
+        """(1, nbatches * elems_per_packet) worker vector: row batch b's
+        per-group partial sums occupy chunk b's first ``num_groups`` lanes."""
+        keys = np.asarray(keys)
+        values = np.asarray(values, np.float32)
+        assert keys.max() < self.num_groups, "hash table sized for distinct keys"
+        self.stats.rows_in += len(keys)
+        parts = []
+        for lo in range(0, len(keys), batch):
+            part = np.bincount(
+                keys[lo : lo + batch],
+                weights=values[lo : lo + batch].astype(np.float64),
+                minlength=self.num_groups).astype(np.float32)
+            parts.append(np.pad(part, (0, self.elems_per_packet - self.num_groups)))
+        self.stats.rows_out += len(parts)  # one partial packet per batch
+        return np.concatenate(parts)[None, :]
+
+    def finalize(self, flat: np.ndarray) -> dict:
+        """Fold the aggregated flat vector (as returned for this job by
+        ``run_multitenant``) back into {group: total}."""
+        part = np.asarray(flat).reshape(-1, self.elems_per_packet)
+        totals = part[:, : self.num_groups].astype(np.float64).sum(axis=0)
+        return {int(k): float(totals[k]) for k in range(self.num_groups)}
+
+
 def spark_like_topn(values: np.ndarray, n: int) -> np.ndarray:
     """Full-scan baseline: every row is shipped to the master and sorted."""
     return np.sort(values)[::-1][:n]

@@ -18,6 +18,7 @@ not mid-request.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, List
 
 import jax
@@ -57,7 +58,8 @@ class ServeEngine:
         self._decode = jax.jit(model.decode_step)
         # telemetry aggregated through the facade (module doc): totals of
         # [requests, generated tokens] reduced over the data axis per batch
-        self.telemetry = {"requests": 0, "tokens_generated": 0, "batches": 0}
+        self.telemetry = {"requests": 0, "tokens_generated": 0, "batches": 0,
+                          "decode_steps": 0, "rejected": 0, "truncated": 0}
         self.aggregator = None
         if agg is not None:
             self._mesh = mesh or compat.make_mesh(
@@ -71,10 +73,41 @@ class ServeEngine:
                 check_vma=False))
 
     def run(self, requests: List[Request]) -> List[Result]:
+        admitted = self._admit(requests)
         out: List[Result] = []
-        for i in range(0, len(requests), self.batch_size):
-            out.extend(self._run_batch(requests[i : i + self.batch_size]))
+        for i in range(0, len(admitted), self.batch_size):
+            out.extend(self._run_batch(admitted[i : i + self.batch_size]))
         return out
+
+    def _admit(self, requests: List[Request]) -> List[Request]:
+        """KV-cache admission control: the cache is sized ``init_cache(b,
+        max_len)``, and a slot consumes ``len(prompt)`` positions at prefill
+        plus one per decode step (the first generated token rides the prefill
+        logits, costing no extra write). A request whose prompt alone
+        exceeds ``max_len`` is refused; one whose prompt fits but whose
+        ``max_new_tokens`` would run past the cache is truncated to the
+        ``max_len - len(prompt) + 1`` tokens that fit, with a warning.
+        Without this, over-length requests silently clobber the last cache
+        position and corrupt every later decode step in the batch."""
+        admitted: List[Request] = []
+        for r in requests:
+            plen = len(r.prompt)
+            if plen > self.max_len:
+                warnings.warn(
+                    f"request {r.rid}: prompt length {plen} exceeds engine "
+                    f"max_len={self.max_len}; rejected")
+                self.telemetry["rejected"] += 1
+                continue
+            fit = self.max_len - plen + 1
+            if r.max_new_tokens > fit:
+                warnings.warn(
+                    f"request {r.rid}: max_new_tokens={r.max_new_tokens} "
+                    f"does not fit the KV cache after a {plen}-token prompt; "
+                    f"truncated to {fit}")
+                self.telemetry["truncated"] += 1
+                r = dataclasses.replace(r, max_new_tokens=fit)
+            admitted.append(r)
+        return admitted
 
     def _record_telemetry(self, reqs: List[Request], results: List[Result]):
         """Fold one batch into the running totals — through the aggregation
@@ -106,14 +139,20 @@ class ServeEngine:
         logits, cache = self._prefill(self.params, batch, cache)
         new = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         gen = [new]
-        steps = max(r.max_new_tokens for r in reqs) - 1
-        for _ in range(steps):
+        # every slot's cache region starts at the BATCH prompt length
+        # (left-padding): slot j can hold at most max_len - plen + 1 tokens
+        # however generous its own admission-time budget was
+        effs = [min(r.max_new_tokens, self.max_len - plen + 1) for r in reqs]
+        # stop as soon as every slot holds its budget — not after the raw
+        # max(max_new_tokens), which overruns the cache for packed batches
+        while len(gen) < max(effs):
             logits, cache = self._decode(self.params, new, cache)
             new = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
             gen.append(new)
+        self.telemetry["decode_steps"] += len(gen) - 1
         gen_np = np.concatenate([np.asarray(g) for g in gen], axis=1)
         results = [
-            Result(rid=r.rid, tokens=gen_np[j, : r.max_new_tokens])
+            Result(rid=r.rid, tokens=gen_np[j, : effs[j]])
             for j, r in enumerate(reqs)
         ]
         self._record_telemetry(reqs, results)

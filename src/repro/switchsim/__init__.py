@@ -16,6 +16,10 @@ Modules
                  which also drives the legacy per-packet switch for parity).
 ``query``      — batched in-switch query operators (Top-N compare kernel,
                  group-by scatter-accumulate kernel) used by ``db/query.py``.
+``tenancy``    — multi-tenant sharing of one dataplane: the J-job round
+                 driver ``run_multitenant``, Jain fairness, and the named
+                 shared-dataplane registry behind the ``switch_emu``
+                 strategy's tenancy wiring (DESIGN.md §10).
 
 ``core/switch.py`` remains the compatibility shim: its ``FpisaSwitch`` is now
 a one-packet-at-a-time view over a single-pipeline ``BatchedDataplane``.
@@ -27,6 +31,16 @@ from repro.switchsim.dataplane import (  # noqa: F401
     NumpyDataplane,
     ingest_batch,
     init_state,
+    lottery_pref,
     reclaim_dead_worker,
     run_aggregation,
+    slot_of,
+    slot_of_tenant,
+)
+from repro.switchsim.tenancy import (  # noqa: F401
+    jain_fairness,
+    reset_shared_dataplanes,
+    run_multitenant,
+    shared_dataplane,
+    shared_emulated_allreduce,
 )

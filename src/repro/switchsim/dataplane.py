@@ -75,6 +75,40 @@ timeout with ``detect_rounds``):
 
 All three dataplanes (batched jit, legacy per-packet shim, numpy) implement
 the identical reclamation semantics; tests/test_recovery.py pins the parity.
+
+Multi-tenancy (DESIGN.md §10)
+-----------------------------
+The switch is a *shared* in-network accelerator: ``num_jobs`` concurrent
+tenants (training jobs, query streams, telemetry) ride one dataplane. Each
+tenant j gets
+
+* a **quota** ``job_slots[j]`` of logical slots per pipeline — its chunks
+  stripe over a contiguous region of the double pool starting at
+  ``2 * job_base(j)``; quotas that tile ``num_slots`` give disjoint
+  (contention-free) partitions, while the default (every quota =
+  ``num_slots``) fully overlaps the pool;
+* a **weight** — when a claim attempt hits a *stale* slot owned by another
+  tenant, a deterministic per-(slot, round) weighted lottery names the one
+  tenant admitted to take it over this round (weighted admission);
+* a **priority** — a higher-priority tenant may *preempt* a stale
+  lower-priority **in-flight** window (accumulator discarded, victim's
+  ``preempted`` counter bumped; the victim's workers simply resubmit once
+  they win the slot back). Completed slots are never preempted: their cached
+  results keep re-serving until the slot is recycled via the lottery, so
+  preemption can never destroy a result a worker is still owed.
+
+A slot is *stale* once no owner-job packet has touched it (claim, add, or
+re-serve) for ``stale_after`` driver rounds — the round clock ``now`` is
+supplied by the driver with each ingest, so all three dataplanes age slots
+identically. Fresh foreign slots always deny the claim (``admission_denied``).
+Counters, the live set, and reclamation are all per-job: ``reclaim_worker
+(w, job=j)`` resets only in-flight slots *owned by job j*.
+
+Single-tenant equivalence: with ``num_jobs=1`` every tenancy rule is
+vacuous (there is no foreign owner), and with quotas that tile the pool and
+no cross-tenant traffic every job sees exactly the single-tenant state
+machine on its own slot region — both pinned bit-for-bit by
+tests/test_multitenant.py.
 """
 from __future__ import annotations
 
@@ -93,7 +127,15 @@ from repro.core import fpisa
 _PACKED_DTYPE = {"fp32": jnp.float32, "fp16": jnp.float16, "bf16": jnp.bfloat16}
 
 COUNTERS = ("packets", "duplicates", "stale", "overwrite", "overflow",
-            "reclaimed")
+            "reclaimed", "admission_denied", "preempted")
+_I_PACKETS, _I_DUP, _I_STALE, _I_OVERWRITE, _I_OVERFLOW, _I_RECLAIMED, \
+    _I_DENIED, _I_PREEMPTED = range(len(COUNTERS))
+
+# modulus/multipliers of the takeover lottery hash: a prime < 2**16 keeps
+# every intermediate below 2**25, so the jnp (int32) and numpy planes compute
+# the identical value with no overflow divergence
+_LOTTERY_MOD = 65521
+_LOTTERY_A, _LOTTERY_B, _LOTTERY_C = 257, 193, 11
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,10 +153,67 @@ class DataplaneConfig:
     # discipline: W retransmissions of the completed chunk + W first packets
     # of the chunk recycling the slot). Overflow packets are deferred.
     rounds_per_call: int = 0
+    # --- multi-tenancy (module doc / DESIGN.md §10) ---
+    num_jobs: int = 1
+    # per-job quota of logical slots per pipeline; None -> num_slots each
+    # (fully shared pool). Quotas summing to num_slots tile the pool into
+    # disjoint per-job partitions.
+    job_slots: tuple[int, ...] | None = None
+    # per-job QoS: priority orders in-flight preemption; weight biases the
+    # stale-slot takeover lottery. None -> all equal.
+    job_priorities: tuple[int, ...] | None = None
+    job_weights: tuple[int, ...] | None = None
+    # per-job port count (workers); None -> num_workers each. Job j's worker
+    # ids live in [0, job_workers[j]); the rest are born non-live for it.
+    job_workers: tuple[int, ...] | None = None
+    # driver rounds without an owner-job touch before a slot counts as stale
+    # (abandoned) and becomes claimable cross-job
+    stale_after: int = 4
 
     @property
     def fmt(self):
         return fpisa.FORMATS[self.fmt_name]
+
+    def _job_tuple(self, field, default) -> tuple[int, ...]:
+        val = field if field is not None else (default,) * self.num_jobs
+        assert len(val) == self.num_jobs, (val, self.num_jobs)
+        return tuple(int(v) for v in val)
+
+    @property
+    def quotas(self) -> tuple[int, ...]:
+        q = self._job_tuple(self.job_slots, self.num_slots)
+        assert all(1 <= v <= self.num_slots for v in q), q
+        return q
+
+    @property
+    def priorities(self) -> tuple[int, ...]:
+        return self._job_tuple(self.job_priorities, 0)
+
+    @property
+    def weights(self) -> tuple[int, ...]:
+        w = self._job_tuple(self.job_weights, 1)
+        assert all(v >= 1 for v in w), w
+        return w
+
+    @property
+    def ports(self) -> tuple[int, ...]:
+        p = self._job_tuple(self.job_workers, self.num_workers)
+        assert all(1 <= v <= self.num_workers for v in p), p
+        return p
+
+    @property
+    def job_bases(self) -> tuple[int, ...]:
+        """Logical-slot origin of each job's quota region (quotas tiling
+        num_slots -> disjoint regions; full quotas -> everyone at 0)."""
+        q, out, acc = self.quotas, [], 0
+        for j in range(self.num_jobs):
+            out.append(acc % self.num_slots)
+            acc += q[j]
+        return tuple(out)
+
+    def job_window(self, job: int = 0) -> int:
+        """Per-job streaming-window depth: its quota across all pipelines."""
+        return self.quotas[job] * self.num_pipelines
 
     @property
     def physical_slots_per_pipeline(self) -> int:
@@ -142,13 +241,16 @@ class DataplaneState(NamedTuple):
     slot_chunk: jax.Array  # (G,) int32 chunk owning the slot; -1 = unclaimed
     result: jax.Array  # (G, E) packed-FP cached broadcast payload
     result_valid: jax.Array  # (G,) bool
-    counters: jax.Array  # (len(COUNTERS),) int32
+    counters: jax.Array  # (J, len(COUNTERS)) int32 per-job counters
     recirc: jax.Array  # (P,) int32 per-pipeline recirculation counter
-    live: jax.Array  # (W,) bool — workers still in the aggregation group
+    live: jax.Array  # (J, W) bool — per-job live worker (port) set
+    slot_job: jax.Array  # (G,) int32 owning job; -1 = never claimed
+    last_touch: jax.Array  # (G,) int32 round of the last owner-job touch
 
 
 def init_state(cfg: DataplaneConfig) -> DataplaneState:
     g, e = cfg.total_slots, cfg.elems_per_packet
+    ports = np.asarray(cfg.ports)
     return DataplaneState(
         exp=jnp.zeros((g, e), jnp.int32),
         man=jnp.zeros((g, e), jnp.int32),
@@ -156,35 +258,67 @@ def init_state(cfg: DataplaneConfig) -> DataplaneState:
         slot_chunk=jnp.full((g,), -1, jnp.int32),
         result=jnp.zeros((g, e), _PACKED_DTYPE[cfg.fmt_name]),
         result_valid=jnp.zeros((g,), bool),
-        counters=jnp.zeros((len(COUNTERS),), jnp.int32),
+        counters=jnp.zeros((cfg.num_jobs, len(COUNTERS)), jnp.int32),
         recirc=jnp.zeros((cfg.num_pipelines,), jnp.int32),
-        live=jnp.ones((cfg.num_workers,), bool),
+        live=jnp.asarray(np.arange(cfg.num_workers)[None, :] < ports[:, None]),
+        slot_job=jnp.full((g,), -1, jnp.int32),
+        last_touch=jnp.zeros((g,), jnp.int32),
     )
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def reclaim_dead_worker(state: DataplaneState, worker, *,
+def reclaim_dead_worker(state: DataplaneState, worker, job=0, *,
                         cfg: DataplaneConfig) -> DataplaneState:
-    """Remove ``worker`` from the live set and reset every in-flight slot
-    (module doc: Worker-failure reclamation). Idempotent: reclaiming an
-    already-dead worker is a no-op."""
-    was_live = state.live[worker]
-    inflight = was_live & (state.slot_chunk >= 0) & ~state.result_valid
+    """Remove ``worker`` from ``job``'s live set and reset every in-flight
+    slot **owned by that job** (module doc: Worker-failure reclamation).
+    Other tenants' slots, live sets, and counters are untouched. Idempotent:
+    reclaiming an already-dead worker is a no-op."""
+    was_live = state.live[job, worker]
+    inflight = (was_live & (state.slot_chunk >= 0) & ~state.result_valid
+                & (state.slot_job == job))
     return state._replace(
         exp=jnp.where(inflight[:, None], 0, state.exp),
         man=jnp.where(inflight[:, None], 0, state.man),
         seen=jnp.where(inflight[:, None], False, state.seen),
-        live=state.live.at[worker].set(False),
-        counters=state.counters.at[COUNTERS.index("reclaimed")].add(
+        live=state.live.at[job, worker].set(False),
+        counters=state.counters.at[job, _I_RECLAIMED].add(
             jnp.sum(inflight).astype(jnp.int32)),
     )
 
 
 def slot_of(cfg: DataplaneConfig, chunks):
-    """Global slot id for each chunk id (pipeline striping + double pool)."""
+    """Global slot id for each chunk id (pipeline striping + double pool) —
+    the single-tenant mapping, identical to ``slot_of_tenant`` with job 0 and
+    a full quota."""
     pipe = chunks % cfg.num_pipelines
     slot = (chunks // cfg.num_pipelines) % cfg.physical_slots_per_pipeline
     return pipe * cfg.physical_slots_per_pipeline + slot
+
+
+def slot_of_tenant(cfg: DataplaneConfig, jobs, chunks, xp=np):
+    """Global slot id under per-job quota striping: job j's chunk stream
+    wraps over the ``2 * quotas[j]`` physical slots starting at
+    ``2 * job_bases[j]`` of its pipeline. With a full quota (base 0) this is
+    exactly ``slot_of`` — the single-tenant parity anchor."""
+    phys = cfg.physical_slots_per_pipeline
+    q = xp.asarray(cfg.quotas)[jobs]
+    base = xp.asarray(cfg.job_bases)[jobs]
+    pipe = chunks % cfg.num_pipelines
+    idx = (chunks // cfg.num_pipelines) % (2 * q)
+    return pipe * phys + (2 * base + idx) % phys
+
+
+def lottery_pref(cfg: DataplaneConfig, now, xp=np):
+    """(G,) preferred tenant per slot for round ``now`` — the weighted
+    admission lottery for stale-slot takeovers. A pure function of
+    (slot, round, weights): order-free within a round and bit-identical
+    across the jnp and numpy dataplanes (int32-safe modular hash)."""
+    weights = cfg.weights
+    g = xp.arange(cfg.total_slots, dtype=xp.int32)
+    h = ((g % _LOTTERY_MOD) * _LOTTERY_A + (now % _LOTTERY_MOD) * _LOTTERY_B
+         + _LOTTERY_C) % _LOTTERY_MOD
+    cumw = xp.asarray(np.cumsum(weights, dtype=np.int32))
+    return xp.searchsorted(cumw, h % sum(weights), side="right").astype(xp.int32)
 
 
 def _rank_table(key, valid, num_keys: int, rounds: int):
@@ -212,7 +346,8 @@ def _rank_table(key, valid, num_keys: int, rounds: int):
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "rounds"))
-def ingest_batch(state: DataplaneState, workers, chunks, payloads, valid, *,
+def ingest_batch(state: DataplaneState, workers, chunks, payloads, valid,
+                 jobs=None, now=0, *,
                  cfg: DataplaneConfig, rounds: int | None = None):
     """Apply a batch of packets to the dataplane (see module doc).
 
@@ -222,6 +357,9 @@ def ingest_batch(state: DataplaneState, workers, chunks, payloads, valid, *,
       chunks:   (B,) int32 chunk ids.
       payloads: (B, E) float payloads.
       valid:    (B,) bool lane mask (padding lanes are ignored).
+      jobs:     (B,) int32 tenant ids in [0, num_jobs); None -> all job 0.
+      now:      scalar driver round (the staleness clock; traced, so driving
+                it every round never recompiles).
 
     Returns ``(state, ready, results, accepted, deferred)`` where ``ready``
     marks packets answered with a broadcast payload (slot completion or
@@ -235,9 +373,15 @@ def ingest_batch(state: DataplaneState, workers, chunks, payloads, valid, *,
     fmt = cfg.fmt
     add = fpisa.fpisa_a_add if cfg.variant == "fpisa_a" else fpisa.fpisa_add_full
     planes = fpisa.encode(payloads, fmt)
+    if jobs is None:
+        jobs = jnp.zeros((b,), jnp.int32)
+    jobs = jnp.clip(jobs, 0, cfg.num_jobs - 1).astype(jnp.int32)
 
-    table, deferred = _rank_table(slot_of(cfg, chunks), valid, g, rounds)
+    table, deferred = _rank_table(
+        slot_of_tenant(cfg, jobs, chunks, jnp), valid, g, rounds)
     lane_pipe = jnp.arange(g) // cfg.physical_slots_per_pipeline
+    prio = jnp.asarray(cfg.priorities)
+    pref = lottery_pref(cfg, now, jnp)  # constant across this call's rounds
 
     ready0 = jnp.zeros((b,), bool)
     results0 = jnp.zeros((b, cfg.elems_per_packet), _PACKED_DTYPE[cfg.fmt_name])
@@ -247,21 +391,50 @@ def ingest_batch(state: DataplaneState, workers, chunks, payloads, valid, *,
         st, ready, results, accepted = carry
         active = pidx >= 0
         pi = jnp.where(active, pidx, 0)
-        wk, ck = workers[pi], chunks[pi]
+        wk, ck, jb = workers[pi], chunks[pi], jobs[pi]
         inp = fpisa.Planes(planes.exp[pi], planes.man[pi])
 
         cur = st.slot_chunk
+        owner = st.slot_job
+        owner_c = jnp.clip(owner, 0, cfg.num_jobs - 1)
         # packets from reclaimed (dead) workers are dropped like stale ones
-        is_stale = active & (~st.live[wk] | (cur > ck))
-        is_new = active & ~is_stale & (cur < ck)
-        proceed = active & ~is_stale
+        act = active & st.live[jb, wk]
+        is_dead = active & ~st.live[jb, wk]
+        free = cur < 0
+        same = act & (free | (owner == jb))
+        cross = act & ~free & (owner != jb)
 
-        # claim: first packet of a newer chunk resets the (recycled) slot
-        seen = jnp.where(is_new[:, None], False, st.seen)
-        exp = jnp.where(is_new[:, None], 0, st.exp)
-        man = jnp.where(is_new[:, None], 0, st.man)
-        rvalid = jnp.where(is_new, False, st.result_valid)
-        slot_chunk = jnp.where(is_new, ck, cur)
+        # same-tenant path: the classic single-tenant slot machine
+        s_stale = same & (cur > ck)
+        is_new = same & (cur < ck)  # includes free slots (cur = -1)
+        s_dup = same & (cur == ck)
+
+        # cross-tenant path: fresh slots deny; stale slots are claimable by
+        # takeover (completed: weighted lottery, or higher priority) or
+        # preemption (in-flight: higher priority, or equal priority winning
+        # the lottery — keeps abandoned windows from deadlocking the slot)
+        slot_stale = (now - st.last_touch) >= cfg.stale_after
+        higher = prio[jb] > prio[owner_c]
+        equal = prio[jb] == prio[owner_c]
+        takeover = cross & st.result_valid & slot_stale & (higher | (pref == jb))
+        preempt = (cross & ~st.result_valid & slot_stale
+                   & (higher | (equal & (pref == jb))))
+        denied = cross & ~(takeover | preempt)
+
+        claim = is_new | takeover | preempt
+        is_stale = is_dead | s_stale
+        proceed = claim | s_dup
+
+        # claim: reset the slot for the new (job, chunk) ownership
+        seen = jnp.where(claim[:, None], False, st.seen)
+        exp = jnp.where(claim[:, None], 0, st.exp)
+        man = jnp.where(claim[:, None], 0, st.man)
+        rvalid = jnp.where(claim, False, st.result_valid)
+        slot_chunk = jnp.where(claim, ck, cur)
+        slot_job = jnp.where(claim, jb, owner)
+        # owner-job activity refreshes the staleness clock (claims, adds, and
+        # re-serve dups); denied/stale/dead packets do not
+        last_touch = jnp.where(proceed, now, st.last_touch)
 
         already = seen[jnp.arange(g), jnp.where(proceed, wk, 0)]
         is_dup = proceed & already
@@ -271,8 +444,9 @@ def ingest_batch(state: DataplaneState, workers, chunks, payloads, valid, *,
         exp = jnp.where(do_add[:, None], newp.exp, exp)
         man = jnp.where(do_add[:, None], newp.man, man)
         seen = seen | (do_add[:, None] & (jnp.arange(w_n)[None, :] == wk[:, None]))
-        # completion requires every LIVE worker's bit (dead bits are waived)
-        complete = do_add & jnp.all(seen | ~st.live[None, :], axis=1)
+        # completion requires every LIVE worker's bit of the packet's own
+        # tenant (dead/unported bits are waived)
+        complete = do_add & jnp.all(seen | ~st.live[jb], axis=1)
 
         # delayed renormalization only on rounds that complete a slot
         result, rvalid = lax.cond(
@@ -301,12 +475,22 @@ def ingest_batch(state: DataplaneState, workers, chunks, payloads, valid, *,
         )
         accepted = accepted.at[jnp.where(do_add, pi, b)].set(True, mode="drop")
 
-        counters = st.counters + jnp.stack([
-            jnp.sum(do_add), jnp.sum(is_dup), jnp.sum(is_stale),
-            jnp.sum(jnp.where(do_add[:, None], addst.overwrite, False)),
-            jnp.sum(jnp.where(do_add[:, None], addst.overflow, False)),
-            jnp.zeros((), jnp.int32),  # reclaimed: control-plane op only
-        ]).astype(jnp.int32)
+        # per-job counters: commutative scatter-adds keyed by the packet's
+        # tenant (preempted is charged to the VICTIM), so batched/numpy/
+        # per-packet stay order-independent and bit-identical
+        i32 = lambda m: m.astype(jnp.int32)  # noqa: E731
+        counters = st.counters
+        counters = counters.at[jb, _I_PACKETS].add(i32(do_add))
+        counters = counters.at[jb, _I_DUP].add(i32(is_dup))
+        counters = counters.at[jb, _I_STALE].add(i32(is_stale))
+        counters = counters.at[jb, _I_OVERWRITE].add(
+            jnp.sum(jnp.where(do_add[:, None], addst.overwrite, False),
+                    axis=1).astype(jnp.int32))
+        counters = counters.at[jb, _I_OVERFLOW].add(
+            jnp.sum(jnp.where(do_add[:, None], addst.overflow, False),
+                    axis=1).astype(jnp.int32))
+        counters = counters.at[jb, _I_DENIED].add(i32(denied))
+        counters = counters.at[owner_c, _I_PREEMPTED].add(i32(preempt))
         # RSAW full-add costs one recirculation pass per accepted packet
         recirc = st.recirc
         if cfg.variant == "full":
@@ -314,7 +498,7 @@ def ingest_batch(state: DataplaneState, workers, chunks, payloads, valid, *,
                 do_add.astype(jnp.int32), lane_pipe, num_segments=cfg.num_pipelines)
 
         st = DataplaneState(exp, man, seen, slot_chunk, result, rvalid,
-                            counters, recirc, st.live)
+                            counters, recirc, st.live, slot_job, last_touch)
         return (st, ready, results, accepted), None
 
     (state, ready, results, accepted), _ = lax.scan(
@@ -353,19 +537,24 @@ class BatchedDataplane:
                 return s
         return self.max_batch
 
-    def ingest_batch(self, workers, chunks, payloads):
+    def ingest_batch(self, workers, chunks, payloads, jobs=None, now=0):
         """Process packets (numpy in/out). Returns (ready, results, accepted)
         aligned with the input batch; within-slot application order is the
-        batch order, matching a sequential per-packet switch."""
+        batch order, matching a sequential per-packet switch. ``jobs`` tags
+        each packet with its tenant (None -> job 0); ``now`` is the driver's
+        round clock for staleness aging."""
         workers = np.asarray(workers, np.int32)
         chunks = np.asarray(chunks, np.int32)
         payloads = np.asarray(payloads, np.float32).reshape(
             len(workers), self.cfg.elems_per_packet)
         b = len(workers)
+        jobs_np = (np.zeros(b, np.int32) if jobs is None
+                   else np.asarray(jobs, np.int32))
         ready = np.zeros(b, bool)
         results = np.zeros((b, self.cfg.elems_per_packet), np.float32)
         accepted = np.zeros(b, bool)
-        gids = np.asarray(slot_of(self.cfg, chunks.astype(np.int64)))
+        gids = np.asarray(slot_of_tenant(
+            self.cfg, jobs_np.astype(np.int64), chunks.astype(np.int64)))
         queue = np.arange(b)
         while queue.size:
             cur, queue = queue[: self.max_batch], queue[self.max_batch :]
@@ -375,11 +564,13 @@ class BatchedDataplane:
             pad = bp - cur.size
             wk = np.pad(workers[cur], (0, pad))
             ck = np.pad(chunks[cur], (0, pad))
+            jb = np.pad(jobs_np[cur], (0, pad))
             pl = np.pad(payloads[cur], ((0, pad), (0, 0)))
             vmask = np.arange(bp) < cur.size
             self.state, rdy, res, acc, dfr = ingest_batch(
                 self.state, jnp.asarray(wk), jnp.asarray(ck), jnp.asarray(pl),
-                jnp.asarray(vmask), cfg=self.cfg, rounds=rounds)
+                jnp.asarray(vmask), jnp.asarray(jb), jnp.int32(now),
+                cfg=self.cfg, rounds=rounds)
             rdy = np.asarray(rdy)[: cur.size]
             res = np.asarray(res, np.float32)[: cur.size]
             acc = np.asarray(acc)[: cur.size]
@@ -393,19 +584,27 @@ class BatchedDataplane:
                 queue = np.concatenate([cur[dfr], queue])
         return ready, results, accepted
 
-    def reclaim_worker(self, worker: int):
-        """Control-plane recovery: drop ``worker`` from the live set and reset
-        its parked in-flight slots (module doc). Survivor retransmissions
-        resubmit the reset chunks from their shadow copies."""
+    def reclaim_worker(self, worker: int, job: int = 0):
+        """Control-plane recovery: drop ``worker`` from ``job``'s live set and
+        reset its parked in-flight slots (module doc). Survivor
+        retransmissions resubmit the reset chunks from their shadow copies."""
         self.state = reclaim_dead_worker(
-            self.state, jnp.int32(worker), cfg=self.cfg)
+            self.state, jnp.int32(worker), jnp.int32(job), cfg=self.cfg)
 
     @property
     def stats(self) -> dict:
-        c = np.asarray(self.state.counters)
+        """Legacy switch-wide stats: per-job counters summed over tenants."""
+        c = np.asarray(self.state.counters).sum(axis=0)
         out = {name: int(c[i]) for i, name in enumerate(COUNTERS)}
         out["recirculations"] = np.asarray(self.state.recirc).tolist()
         return out
+
+    @property
+    def job_stats(self) -> list[dict]:
+        """Per-tenant counters, one dict per job id."""
+        c = np.asarray(self.state.counters)
+        return [{name: int(c[j, i]) for i, name in enumerate(COUNTERS)}
+                for j in range(self.cfg.num_jobs)]
 
 
 class NumpyDataplane:
@@ -431,61 +630,111 @@ class NumpyDataplane:
         self._slot_chunk = np.full((g,), -1, np.int64)
         self._result = np.zeros((g, e), np.float32)
         self._result_valid = np.zeros((g,), bool)
-        self._live = np.ones((cfg.num_workers,), bool)
-        self.stats = {name: 0 for name in COUNTERS}
-        self.stats["recirculations"] = [0] * cfg.num_pipelines
+        self._live = (np.arange(cfg.num_workers)[None, :]
+                      < np.asarray(cfg.ports)[:, None])
+        self._slot_job = np.full((g,), -1, np.int64)
+        self._last_touch = np.zeros((g,), np.int64)
+        self._counters = np.zeros((cfg.num_jobs, len(COUNTERS)), np.int64)
+        self._recirc = [0] * cfg.num_pipelines
 
-    def reclaim_worker(self, worker: int):
-        """Same reclamation semantics as ``BatchedDataplane.reclaim_worker``."""
-        if not self._live[worker]:
+    @property
+    def stats(self) -> dict:
+        """Legacy switch-wide stats: per-job counters summed over tenants."""
+        c = self._counters.sum(axis=0)
+        out = {name: int(c[i]) for i, name in enumerate(COUNTERS)}
+        out["recirculations"] = list(self._recirc)
+        return out
+
+    @property
+    def job_stats(self) -> list[dict]:
+        """Per-tenant counters, one dict per job id."""
+        return [{name: int(self._counters[j, i])
+                 for i, name in enumerate(COUNTERS)}
+                for j in range(self.cfg.num_jobs)]
+
+    def reclaim_worker(self, worker: int, job: int = 0):
+        """Same reclamation semantics as ``BatchedDataplane.reclaim_worker``:
+        only slots owned by ``job`` are reset."""
+        if not self._live[job, worker]:
             return
-        self._live[worker] = False
-        inflight = (self._slot_chunk >= 0) & ~self._result_valid
+        self._live[job, worker] = False
+        inflight = ((self._slot_chunk >= 0) & ~self._result_valid
+                    & (self._slot_job == job))
         self._exp[inflight] = 0
         self._man[inflight] = 0
         self._seen[inflight] = False
-        self.stats["reclaimed"] += int(inflight.sum())
+        self._counters[job, _I_RECLAIMED] += int(inflight.sum())
 
-    def ingest_batch(self, workers, chunks, payloads):
+    def ingest_batch(self, workers, chunks, payloads, jobs=None, now=0):
         cfg, F = self.cfg, self._np
         workers = np.asarray(workers, np.int64)
         chunks = np.asarray(chunks, np.int64)
         payloads = np.asarray(payloads, np.float32).reshape(
             len(workers), cfg.elems_per_packet)
-        add = F.fpisa_a_add if cfg.variant == "fpisa_a" else F.fpisa_add_full
-        gids = np.asarray(slot_of(cfg, chunks))
-        in_exp, in_man = F.encode(payloads)
         b = len(workers)
+        jobs = (np.zeros(b, np.int64) if jobs is None
+                else np.asarray(jobs, np.int64))
+        add = F.fpisa_a_add if cfg.variant == "fpisa_a" else F.fpisa_add_full
+        gids = np.asarray(slot_of_tenant(cfg, jobs, chunks))
+        pref = lottery_pref(cfg, int(now), np)
+        prio = cfg.priorities
+        in_exp, in_man = F.encode(payloads)
         ready = np.zeros(b, bool)
         results = np.zeros((b, cfg.elems_per_packet), np.float32)
         accepted = np.zeros(b, bool)
+        ct = self._counters
         for i in range(b):
-            g, w, c = int(gids[i]), int(workers[i]), int(chunks[i])
-            if not self._live[w] or self._slot_chunk[g] > c:
-                self.stats["stale"] += 1
+            g, w, c, j = int(gids[i]), int(workers[i]), int(chunks[i]), int(jobs[i])
+            if not self._live[j, w]:
+                ct[j, _I_STALE] += 1
                 continue
-            if self._slot_chunk[g] < c:  # claim the (recycled) slot
+            cur, owner = self._slot_chunk[g], int(self._slot_job[g])
+            if cur >= 0 and owner != j:
+                # cross-tenant: deny fresh slots; stale ones fall to the
+                # takeover lottery / priority preemption (jit round_body
+                # mirrors these rules lane-wise)
+                slot_stale = (int(now) - self._last_touch[g]) >= cfg.stale_after
+                higher = prio[j] > prio[owner]
+                equal = prio[j] == prio[owner]
+                if self._result_valid[g]:
+                    allowed = slot_stale and (higher or pref[g] == j)
+                else:
+                    allowed = slot_stale and (higher or (equal and pref[g] == j))
+                    if allowed:
+                        ct[owner, _I_PREEMPTED] += 1
+                if not allowed:
+                    ct[j, _I_DENIED] += 1
+                    continue
+                claim = True
+            elif cur > c:
+                ct[j, _I_STALE] += 1
+                continue
+            else:
+                claim = cur < c
+            if claim:  # reset the slot for the new (job, chunk) ownership
                 self._slot_chunk[g] = c
+                self._slot_job[g] = j
                 self._seen[g] = False
                 self._exp[g] = 0
                 self._man[g] = 0
                 self._result_valid[g] = False
+            self._last_touch[g] = int(now)  # owner-job activity: not stale
             if self._seen[g, w]:
-                self.stats["duplicates"] += 1  # idempotent: do NOT re-add
+                ct[j, _I_DUP] += 1  # idempotent: do NOT re-add
                 if self._result_valid[g]:
                     ready[i] = True
                     results[i] = self._result[g]
                 continue
             self._seen[g, w] = True
-            self.stats["packets"] += 1
+            ct[j, _I_PACKETS] += 1
             e2, m2, over, ovf = add(self._exp[g], self._man[g], in_exp[i], in_man[i])
             self._exp[g], self._man[g] = e2, m2
-            self.stats["overwrite"] += int(over.sum())
-            self.stats["overflow"] += int(ovf.sum())
+            ct[j, _I_OVERWRITE] += int(over.sum())
+            ct[j, _I_OVERFLOW] += int(ovf.sum())
             accepted[i] = True
             if cfg.variant == "full":
-                self.stats["recirculations"][g // cfg.physical_slots_per_pipeline] += 1
-            if (self._seen[g] | ~self._live).all():
+                self._recirc[g // cfg.physical_slots_per_pipeline] += 1
+            if (self._seen[g] | ~self._live[j]).all():
                 self._result[g] = F.renormalize(self._exp[g], self._man[g])
                 self._result_valid[g] = True
                 ready[i] = True
@@ -504,6 +753,8 @@ def run_aggregation(
     fail_round: int | None = None,
     detect_rounds: int = 2,
     chunk_base: int = 0,
+    job: int = 0,
+    now_base: int = 0,
 ):
     """Batch-per-round all-reduce driver over an unreliable fabric.
 
@@ -540,12 +791,23 @@ def run_aggregation(
     going stale: chunk ids stay monotonic across calls, which is exactly the
     SwitchML recycling discipline. State carried over from the previous call
     is recycled naturally as the new chunks claim slots.
+
+    ``job`` tags every packet with that tenant id on a multi-tenant switch
+    (this driver streams ONE job's traffic; ``tenancy.run_multitenant``
+    interleaves several). ``now_base`` offsets the staleness clock the same
+    way ``chunk_base`` offsets chunk ids, so consecutive calls against a
+    shared switch keep aging the other tenants' slots; the clock reached is
+    left on ``switch.last_now``.
     """
     cfg = switch.cfg
     w, n = worker_vectors.shape
-    assert w == cfg.num_workers
+    ports = getattr(cfg, "ports", None)
+    assert w == (ports[job] if ports is not None else cfg.num_workers)
     e = cfg.elems_per_packet
-    window = cfg.num_slots * getattr(cfg, "num_pipelines", 1)
+    if hasattr(cfg, "job_window"):
+        window = cfg.job_window(job)
+    else:
+        window = cfg.num_slots * getattr(cfg, "num_pipelines", 1)
     pad = (-n) % e
     vecs = np.pad(worker_vectors, ((0, 0), (0, pad))).astype(np.float32)
     nchunks = vecs.shape[1] // e
@@ -564,7 +826,7 @@ def run_aggregation(
             have_result[fail_worker, :] = True
             reclaim_at = rnd + detect_rounds  # heartbeat timeout fires then
         if reclaim_at is not None and rnd >= reclaim_at:
-            switch.reclaim_worker(fail_worker)
+            switch.reclaim_worker(fail_worker, job)
             reclaim_at = None
         if have_result.all():
             break
@@ -579,7 +841,8 @@ def run_aggregation(
         payloads = vecs3[ws, cs]
         if batched:
             ready, results, accepted = switch.ingest_batch(
-                ws, cs + chunk_base, payloads)
+                ws, cs + chunk_base, payloads,
+                jobs=np.full(ws.size, job, np.int32), now=now_base + rnd)
             if record_arrivals:
                 for i in np.nonzero(accepted)[0]:
                     arrivals.setdefault(int(cs[i]), []).append(int(ws[i]))
@@ -590,7 +853,8 @@ def run_aggregation(
             results = np.zeros((ws.size, e), np.float32)
             for i in range(ws.size):
                 res = switch.ingest(
-                    legacy.Packet(int(ws[i]), int(cs[i]) + chunk_base, payloads[i]))
+                    legacy.Packet(int(ws[i]), int(cs[i]) + chunk_base, payloads[i]),
+                    job=job, now=now_base + rnd)
                 if res is not None:
                     ready[i] = True
                     results[i] = res.payload
@@ -606,6 +870,7 @@ def run_aggregation(
                 have_result[miss[ok], c] = True
     if not have_result.all():
         raise RuntimeError("aggregation did not complete within max_rounds")
+    switch.last_now = now_base + rnd  # staleness clock for the next caller
     flat = out.reshape(-1)[:n]
     if record_arrivals:
         return flat, arrivals

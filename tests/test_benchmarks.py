@@ -21,6 +21,7 @@ MODULES = [
     "fig11_e2e_speedup",
     "fig13_queries",
     "fig_recovery",
+    "fig_contention",
     "tab3_resource_util",
     "roofline",
 ]
@@ -61,6 +62,15 @@ SCHEMAS = {
                      "steps_to_recover", "reclaimed", "survivor_mesh",
                      "recovery_overhead_x", "pre_failure_tok_s",
                      "post_failure_tok_s", "bit_identical"],
+    },
+    "contention": {
+        "config": ["num_jobs", "num_slots", "drop_prob", "priorities",
+                   "weights"],
+        "jobs": None,
+        "fairness": ["jain_normalized", "jain_shared"],
+        "query": ["max_rel_err", "num_groups", "rows"],
+        "completed": None,
+        "rounds": None,
     },
 }
 
@@ -114,3 +124,11 @@ def test_benchmark_suite_smoke(tmp_path):
     assert rec["switch"]["reclaimed"] > 0
     assert rec["training"]["bit_identical"] is True
     assert rec["training"]["reclaimed"] > 0
+    # the ISSUE-6 tenancy invariants hold at smoke size: every tenant of the
+    # shared switch completed, and the query stream's group sums carry only
+    # FPISA quantization error — contention never corrupts a result
+    con = json.loads((tmp_path / "BENCH_contention.json").read_text())["results"]
+    assert con["completed"] is True
+    assert con["query"]["max_rel_err"] < 1e-3
+    assert 0.0 < con["fairness"]["jain_normalized"] <= 1.0
+    assert len(con["jobs"]) == 3

@@ -69,6 +69,76 @@ def test_greedy_decode_deterministic():
     np.testing.assert_array_equal(a, b)
 
 
+def _serve_engine(max_len=16, batch_size=4):
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return ServeEngine(model, params, batch_size=batch_size, max_len=max_len)
+
+
+def test_serve_overlong_prompt_rejected():
+    """A prompt that cannot even be prefilled into the KV cache is refused
+    at run() admission instead of silently clobbering the cache tail."""
+    eng = _serve_engine(max_len=16)
+    good = Request(rid=0, prompt=np.arange(4, dtype=np.int32), max_new_tokens=4)
+    bad = Request(rid=1, prompt=np.arange(17, dtype=np.int32) % 7,
+                  max_new_tokens=2)
+    with pytest.warns(UserWarning, match="rejected"):
+        results = eng.run([good, bad])
+    assert [r.rid for r in results] == [0]
+    assert eng.telemetry["rejected"] == 1
+    assert eng.telemetry["requests"] == 1
+
+
+def test_serve_overbudget_request_truncated():
+    """max_new_tokens past the cache is truncated (with a warning) to the
+    max_len - len(prompt) + 1 tokens that actually fit."""
+    eng = _serve_engine(max_len=16)
+    req = Request(rid=7, prompt=np.arange(5, dtype=np.int32),
+                  max_new_tokens=100)
+    with pytest.warns(UserWarning, match="truncated to 12"):
+        (res,) = eng.run([req])
+    assert res.tokens.shape == (12,)  # 16 - 5 + 1
+    assert eng.telemetry["truncated"] == 1
+    assert eng.telemetry["tokens_generated"] == 12
+    # within-budget requests are untouched and raise no warning
+    eng2 = _serve_engine(max_len=16)
+    (ok,) = eng2.run([Request(rid=8, prompt=np.arange(5, dtype=np.int32),
+                              max_new_tokens=6)])
+    assert ok.tokens.shape == (6,)
+    assert eng2.telemetry["truncated"] == eng2.telemetry["rejected"] == 0
+
+
+def test_serve_batch_padding_caps_decode_budget():
+    """Left-padding packs every slot's cache region at the BATCH prompt
+    length, so a short-prompt request sharing a batch with a long prompt is
+    capped by the batch's headroom even when its own admission passed."""
+    eng = _serve_engine(max_len=16, batch_size=2)
+    long_p = Request(rid=0, prompt=np.arange(12, dtype=np.int32) % 7,
+                     max_new_tokens=5)
+    short_p = Request(rid=1, prompt=np.arange(2, dtype=np.int32),
+                      max_new_tokens=8)  # fits alone, not beside long_p
+    results = eng.run([long_p, short_p])
+    assert results[0].tokens.shape == (5,)
+    assert results[1].tokens.shape == (5,)  # capped at 16 - 12 + 1
+    assert eng.telemetry["decode_steps"] == 4
+
+
+def test_serve_decode_stops_when_all_slots_finished():
+    """The decode loop runs exactly max(effective budgets) - 1 steps and the
+    per-request token telemetry is unchanged by the early stop."""
+    eng = _serve_engine(max_len=64, batch_size=4)
+    reqs = [Request(rid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                    max_new_tokens=6),
+            Request(rid=1, prompt=np.asarray([4, 5], np.int32),
+                    max_new_tokens=3)]
+    results = eng.run(reqs)
+    assert [r.tokens.shape for r in results] == [(6,), (3,)]
+    assert eng.telemetry["decode_steps"] == 5  # max(6, 3) - 1
+    assert eng.telemetry["tokens_generated"] == 9
+    assert eng.telemetry["requests"] == 2
+
+
 ELASTIC_CODE = r"""
 import numpy as np, jax
 from repro.configs import get_smoke_config

@@ -1,0 +1,387 @@
+"""Multi-tenant switch sharing with QoS-aware slot admission (DESIGN.md §10).
+
+Pins the tentpole invariants:
+
+* **single-tenant equivalence** — with ``num_jobs=1`` (or equal disjoint
+  quotas and no contention) every dataplane (batched jit, per-packet,
+  numpy mirror) is bit-identical to the pre-tenancy behavior, including the
+  seeded-RNG stream of the round drivers;
+* **admission semantics** — fresh foreign slots deny, stale completed slots
+  are takeover-recycled (never "preempted"), stale in-flight slots are
+  preempted with the loss charged to the victim's per-job counters;
+* **per-job reclamation** — a dead worker's reclamation resets only its own
+  job's in-flight slots;
+* the shared-dataplane registry + ``switch_emu`` tenancy wiring, and a
+  query stream (``db.query.StreamedGroupBySum``) riding the same switch as
+  a training job.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro import switchsim as ss
+from repro.db import query as Q
+from repro.switchsim.dataplane import COUNTERS
+
+
+def _vec(w, n, seed, scale=0.01):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((w, n)) * scale).astype(np.float32)
+
+
+def _bits(a):
+    return np.ascontiguousarray(np.asarray(a, np.float32)).view(np.int32)
+
+
+class PerPacketLeg:
+    """Per-packet dataplane leg for the driver-parity tests: every packet of
+    a round goes through its own one-packet ``ingest_batch`` dispatch (the
+    ``core.switch.FpisaSwitch`` view, but tenancy-aware). Per-slot processing
+    is sequential in both dataplanes, so this must be bit-identical to the
+    one-dispatch batched path."""
+
+    def __init__(self, cfg):
+        self.dp = ss.BatchedDataplane(cfg)
+        self.cfg = cfg
+
+    def ingest_batch(self, workers, chunks, payloads, jobs=None, now=0):
+        b = len(workers)
+        jobs = np.zeros(b, np.int32) if jobs is None else np.asarray(jobs)
+        ready = np.zeros(b, bool)
+        results = np.zeros((b, self.cfg.elems_per_packet), np.float32)
+        accepted = np.zeros(b, bool)
+        for i in range(b):
+            r, res, acc = self.dp.ingest_batch(
+                [workers[i]], [chunks[i]], np.asarray(payloads)[i][None],
+                jobs=[int(jobs[i])], now=now)
+            ready[i], results[i], accepted[i] = r[0], res[0], acc[0]
+        return ready, results, accepted
+
+    def reclaim_worker(self, worker, job=0):
+        self.dp.reclaim_worker(worker, job)
+
+    @property
+    def job_stats(self):
+        return self.dp.job_stats
+
+
+# ---------------------------------------------------------------------------
+# slot mapping + lottery
+# ---------------------------------------------------------------------------
+
+
+def test_slot_of_tenant_single_job_matches_legacy():
+    cfg = ss.DataplaneConfig(num_workers=4, num_slots=8, num_pipelines=2)
+    chunks = np.arange(256)
+    np.testing.assert_array_equal(
+        ss.slot_of_tenant(cfg, np.zeros(256, np.int64), chunks),
+        ss.slot_of(cfg, chunks))
+
+
+def test_slot_of_tenant_disjoint_quotas_partition_the_pool():
+    cfg = ss.DataplaneConfig(num_workers=4, num_slots=8, num_pipelines=2,
+                             num_jobs=2, job_slots=(4, 4), job_workers=(4, 4))
+    chunks = np.arange(512)
+    s0 = set(ss.slot_of_tenant(cfg, np.zeros(512, np.int64), chunks).tolist())
+    s1 = set(ss.slot_of_tenant(cfg, np.ones(512, np.int64), chunks).tolist())
+    assert s0.isdisjoint(s1)
+    assert len(s0) == len(s1) == 2 * 4 * 2  # double pool x quota x pipelines
+
+
+def test_lottery_deterministic_and_weight_proportional():
+    cfg = ss.DataplaneConfig(num_workers=4, num_slots=4, num_jobs=3,
+                             job_workers=(2, 1, 1), job_weights=(6, 3, 1))
+    draws = np.stack([np.asarray(ss.lottery_pref(cfg, now))
+                      for now in range(400)])
+    again = np.stack([np.asarray(ss.lottery_pref(cfg, now))
+                      for now in range(400)])
+    np.testing.assert_array_equal(draws, again)  # deterministic in (slot,now)
+    # jnp evaluation (the jitted kernel's path) agrees with numpy
+    np.testing.assert_array_equal(
+        np.asarray(ss.lottery_pref(cfg, 17, jnp)),
+        ss.lottery_pref(cfg, 17, np))
+    counts = np.bincount(draws.reshape(-1), minlength=3)
+    frac = counts / counts.sum()
+    # weighted 6:3:1 — generous tolerance, the hash is only pseudo-uniform
+    assert frac[0] > frac[1] > frac[2]
+    assert abs(frac[0] - 0.6) < 0.1 and abs(frac[2] - 0.1) < 0.07
+
+
+# ---------------------------------------------------------------------------
+# single-tenant equivalence (the tentpole invariant)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("drop,seed", [(0.0, 0), (0.3, 7)])
+def test_j1_bit_parity_across_all_dataplanes(drop, seed):
+    """With one tenant, run_multitenant must consume the seeded RNG stream
+    identically to run_aggregation and produce bit-identical results on the
+    batched, per-packet, and numpy dataplanes."""
+    cfg = ss.DataplaneConfig(num_workers=4, num_slots=4, elems_per_packet=64,
+                             num_pipelines=2)
+    vec = _vec(4, 1024, seed=3)
+    want = ss.run_aggregation(ss.BatchedDataplane(cfg), vec,
+                              drop_prob=drop, seed=seed)
+    for leg in (ss.BatchedDataplane, ss.NumpyDataplane, PerPacketLeg):
+        (got,), rep = ss.run_multitenant(leg(cfg), [vec],
+                                         drop_prob=drop, seed=seed)
+        np.testing.assert_array_equal(_bits(got), _bits(want), err_msg=leg.__name__)
+        assert rep["done_round"][0] == rep["rounds"]
+
+
+def test_equal_quota_no_contention_bit_parity():
+    """Equal disjoint quotas + no contention: each tenant's run is
+    bit-identical to an isolated single-tenant switch sized to its quota."""
+    cfgJ2 = ss.DataplaneConfig(num_workers=4, num_slots=8, elems_per_packet=64,
+                               num_jobs=2, job_slots=(4, 4), job_workers=(4, 4))
+    cfg1 = ss.DataplaneConfig(num_workers=4, num_slots=4, elems_per_packet=64)
+    va, vb = _vec(4, 2048, seed=1), _vec(4, 2048, seed=2)
+    ia = ss.run_aggregation(ss.BatchedDataplane(cfg1), va)
+    ib = ss.run_aggregation(ss.BatchedDataplane(cfg1), vb)
+    for leg in (ss.BatchedDataplane, ss.NumpyDataplane):
+        (fa, fb), rep = ss.run_multitenant(leg(cfgJ2), [va, vb])
+        np.testing.assert_array_equal(_bits(fa), _bits(ia), err_msg=leg.__name__)
+        np.testing.assert_array_equal(_bits(fb), _bits(ib), err_msg=leg.__name__)
+        for s in rep["job_stats"]:
+            assert s["admission_denied"] == 0 and s["preempted"] == 0
+
+
+def test_contention_batched_numpy_bit_parity_and_stats():
+    """Under real contention (full-overlap quotas, drops) the batched jit
+    and numpy dataplanes stay bit-identical, including per-job counters."""
+    cfg = ss.DataplaneConfig(num_workers=9, num_slots=8, elems_per_packet=64,
+                             num_jobs=3, job_workers=(4, 4, 1),
+                             job_priorities=(1, 0, 0), job_weights=(2, 1, 1))
+    vs = [_vec(4, 2048, 1), _vec(4, 2048, 2), _vec(1, 512, 3)]
+    fb, repb = ss.run_multitenant(ss.BatchedDataplane(cfg), vs,
+                                  drop_prob=0.2, seed=5)
+    fn, repn = ss.run_multitenant(ss.NumpyDataplane(cfg), vs,
+                                  drop_prob=0.2, seed=5)
+    for x, y in zip(fb, fn):
+        np.testing.assert_array_equal(_bits(x), _bits(y))
+    assert repb["job_stats"] == repn["job_stats"]
+    assert repb["done_round"] == repn["done_round"]
+    # the shared pool is oversubscribed: somebody must have been denied
+    assert sum(s["admission_denied"] for s in repb["job_stats"]) > 0
+    # each tenant's aggregate is still a correct FPISA sum of its own workers
+    for f, v in zip(fb, vs):
+        ref = v.astype(np.float64).sum(0)
+        assert np.max(np.abs(np.asarray(f, np.float64) - ref)) < 0.1
+
+
+def test_run_multitenant_validates_port_counts():
+    cfg = ss.DataplaneConfig(num_workers=3, num_slots=4, elems_per_packet=64,
+                             num_jobs=2, job_workers=(2, 1))
+    with pytest.raises(AssertionError):
+        ss.run_multitenant(ss.NumpyDataplane(cfg),
+                           [_vec(2, 128, 0), _vec(2, 128, 1)])
+
+
+# ---------------------------------------------------------------------------
+# admission semantics (both dataplanes, lockstep)
+# ---------------------------------------------------------------------------
+
+_ADM_CFG = dict(num_workers=2, num_slots=2, elems_per_packet=4,
+                num_jobs=2, job_workers=(2, 2), job_priorities=(0, 1),
+                stale_after=3)
+
+
+@pytest.mark.parametrize("leg", [ss.BatchedDataplane, ss.NumpyDataplane])
+def test_fresh_foreign_slot_denied_and_cache_still_served(leg):
+    cfg = ss.DataplaneConfig(**_ADM_CFG)
+    dp = leg(cfg)
+    p = np.ones((1, 4), np.float32)
+    r, res, _ = dp.ingest_batch([0, 1], [0, 0], np.vstack([p, 2 * p]),
+                                jobs=[0, 0], now=0)
+    assert list(r) == [False, True]  # job0's chunk completes
+    # a foreign packet hitting the FRESH completed slot is denied...
+    r, _, acc = dp.ingest_batch([0], [0], 3 * p, jobs=[1], now=1)
+    assert not r[0] and not acc[0]
+    assert dp.job_stats[1]["admission_denied"] == 1
+    # ...and the owner's retransmission is still served from the cache
+    r, res, _ = dp.ingest_batch([0], [0], p, jobs=[0], now=2)
+    assert r[0]
+    np.testing.assert_allclose(np.asarray(res)[0], 3.0)
+
+
+@pytest.mark.parametrize("leg", [ss.BatchedDataplane, ss.NumpyDataplane])
+def test_stale_completed_slot_is_takeover_not_preemption(leg):
+    """Recycling a stale COMPLETED slot is a takeover: the cached result is
+    released, but no preemption is charged — preemption only ever applies to
+    in-flight slots (a completed slot's result is never 'preempted')."""
+    cfg = ss.DataplaneConfig(**_ADM_CFG)
+    dp = leg(cfg)
+    p = np.ones((1, 4), np.float32)
+    dp.ingest_batch([0, 1], [0, 0], np.vstack([p, 2 * p]), jobs=[0, 0], now=0)
+    # past stale_after, the higher-priority tenant claims the slot
+    r, _, acc = dp.ingest_batch([0], [0], 3 * p, jobs=[1], now=6)
+    assert acc[0] and not r[0]
+    assert [s["preempted"] for s in dp.job_stats] == [0, 0]
+    # the takeover started a fresh in-flight window for job1
+    r, res, _ = dp.ingest_batch([1], [0], 4 * p, jobs=[1], now=6)
+    assert r[0]
+    np.testing.assert_allclose(np.asarray(res)[0], 7.0)
+
+
+@pytest.mark.parametrize("leg", [ss.BatchedDataplane, ss.NumpyDataplane])
+def test_inflight_preemption_charged_to_victim(leg):
+    cfg = ss.DataplaneConfig(**_ADM_CFG)
+    dp = leg(cfg)
+    p = np.ones((1, 4), np.float32)
+    # job0 parks an in-flight window (1 of 2 bitmap bits)
+    dp.ingest_batch([0], [2], p, jobs=[0], now=0)
+    # fresh in-flight: even the higher-priority tenant must wait
+    r, _, acc = dp.ingest_batch([0], [2], 5 * p, jobs=[1], now=1)
+    assert not acc[0]
+    assert dp.job_stats[0]["preempted"] == 0
+    # ...until the window goes stale, then it is preempted, charged to job0
+    _, _, acc = dp.ingest_batch([0], [2], 5 * p, jobs=[1], now=20)
+    assert acc[0]
+    assert dp.job_stats[0]["preempted"] == 1
+    assert dp.job_stats[1]["preempted"] == 0
+
+
+@pytest.mark.parametrize("leg", [ss.BatchedDataplane, ss.NumpyDataplane])
+def test_per_job_reclaim_only_resets_owner_jobs_slots(leg):
+    cfg = ss.DataplaneConfig(num_workers=2, num_slots=2, elems_per_packet=4,
+                             num_jobs=2, job_slots=(1, 1), job_workers=(2, 2))
+    dp = leg(cfg)
+    p = np.ones((1, 4), np.float32)
+    # both jobs park an in-flight window (worker 0 each, disjoint slots)
+    dp.ingest_batch([0], [0], p, jobs=[0], now=0)
+    dp.ingest_batch([0], [0], 2 * p, jobs=[1], now=0)
+    dp.reclaim_worker(0, job=1)  # job1's worker 0 dies
+    stats = dp.job_stats
+    assert stats[0]["reclaimed"] == 0 and stats[1]["reclaimed"] == 1
+    # job0's window survives: worker 1 completes the full 2-worker sum
+    r, res, _ = dp.ingest_batch([1], [0], 3 * p, jobs=[0], now=1)
+    assert r[0]
+    np.testing.assert_allclose(np.asarray(res)[0], 4.0)  # 1 + 3
+    # job1's slot was reset and its dead worker waived: the survivor's
+    # retransmission re-claims and completes as a live-worker sum
+    r, res, _ = dp.ingest_batch([1], [0], 5 * p, jobs=[1], now=1)
+    assert r[0]
+    np.testing.assert_allclose(np.asarray(res)[0], 5.0)  # dead 2.0 dropped
+
+
+def test_job_stats_sum_to_switch_stats():
+    cfg = ss.DataplaneConfig(num_workers=9, num_slots=8, elems_per_packet=64,
+                             num_jobs=3, job_workers=(4, 4, 1))
+    dp = ss.NumpyDataplane(cfg)
+    ss.run_multitenant(dp, [_vec(4, 1024, 1), _vec(4, 1024, 2),
+                            _vec(1, 256, 3)], drop_prob=0.1, seed=9)
+    total, per_job = dp.stats, dp.job_stats
+    for name in COUNTERS:
+        assert total[name] == sum(s[name] for s in per_job)
+
+
+# ---------------------------------------------------------------------------
+# query stream + training job sharing one switch
+# ---------------------------------------------------------------------------
+
+
+def test_query_stream_shares_switch_with_training_job():
+    rng = np.random.default_rng(42)
+    keys = rng.integers(0, 16, size=20_000)
+    values = (rng.standard_normal(20_000) * 3).astype(np.float32)
+    gb = Q.StreamedGroupBySum(num_groups=16, elems_per_packet=64)
+    qvec = gb.vectors(keys, values, batch=2048)
+    train = _vec(4, 2048, seed=8)
+    cfg = ss.DataplaneConfig(num_workers=5, num_slots=8, elems_per_packet=64,
+                             num_jobs=2, job_workers=(4, 1),
+                             job_priorities=(1, 0))
+    (tflat, qflat), rep = ss.run_multitenant(
+        ss.NumpyDataplane(cfg), [train, qvec], drop_prob=0.1, seed=4)
+    got = gb.finalize(qflat)
+    want = Q.spark_like_groupby(keys, values)
+    assert got.keys() == want.keys()
+    for k in want:
+        assert got[k] == pytest.approx(want[k], rel=1e-4)
+    ref = train.astype(np.float64).sum(0)
+    assert np.max(np.abs(np.asarray(tflat, np.float64) - ref)) < 0.1
+    assert all(d is not None for d in rep["done_round"])
+
+
+# ---------------------------------------------------------------------------
+# shared-dataplane registry + switch_emu wiring
+# ---------------------------------------------------------------------------
+
+
+def test_shared_dataplane_registry_create_validate_reset():
+    ss.reset_shared_dataplanes()
+    try:
+        cfg = ss.DataplaneConfig(num_workers=2, num_slots=4,
+                                 num_jobs=2, job_workers=(2, 2))
+        dp = ss.shared_dataplane("t0", cfg)
+        assert ss.shared_dataplane("t0", cfg) is dp
+        other = ss.DataplaneConfig(num_workers=3, num_slots=4,
+                                   num_jobs=2, job_workers=(3, 3))
+        with pytest.raises(ValueError, match="mismatched"):
+            ss.shared_dataplane("t0", other)
+    finally:
+        ss.reset_shared_dataplanes()
+
+
+def test_switch_emu_aggregators_share_one_dataplane():
+    """Two training jobs' switch_emu aggregators (different ``switch_job``)
+    plus direct query traffic ride one named dataplane; the aggregated bits
+    are identical to the non-shared single-tenant switch_emu path."""
+    import jax
+
+    from repro.core.agg import AggConfig, Aggregator
+
+    ss.reset_shared_dataplanes()
+    try:
+        mesh = compat.make_mesh((1,), ("data",))
+        x0 = jnp.asarray(_vec(1, 600, seed=10)[0])
+        x1 = jnp.asarray(_vec(1, 600, seed=11)[0])
+        base = Aggregator(AggConfig(strategy="switch_emu"), ("data",))
+        ref = jax.jit(compat.shard_map(base.allreduce, mesh=mesh,
+                                       in_specs=P(), out_specs=P(),
+                                       check_vma=False))
+        want0, want1 = ref(x0), ref(x1)
+        outs = []
+        for job, x in ((0, x0), (1, x1)):
+            agg = Aggregator(AggConfig(strategy="switch_emu",
+                                       switch_shared="shared-test",
+                                       switch_jobs=2, switch_job=job),
+                             ("data",))
+            outs.append(jax.jit(compat.shard_map(
+                agg.allreduce, mesh=mesh, in_specs=P(), out_specs=P(),
+                check_vma=False))(x))
+        # bits unchanged by tenancy: the lossless fabric delivers every
+        # result however admission interleaves the claims
+        np.testing.assert_array_equal(_bits(outs[0]), _bits(want0))
+        np.testing.assert_array_equal(_bits(outs[1]), _bits(want1))
+        entry_dp = ss.shared_dataplane(
+            "shared-test",
+            ss.DataplaneConfig(num_workers=1, num_slots=8,
+                               elems_per_packet=256, fmt_name="fp32",
+                               variant="fpisa_a", num_jobs=2,
+                               job_workers=(1, 1)))
+        per_job = entry_dp.job_stats
+        assert per_job[0]["packets"] > 0 and per_job[1]["packets"] > 0
+    finally:
+        ss.reset_shared_dataplanes()
+
+
+def test_switch_job_out_of_range_rejected():
+    from repro.core.agg import AggConfig
+
+    with pytest.raises(ValueError, match="switch_job"):
+        AggConfig(strategy="switch_emu", switch_shared="x",
+                  switch_jobs=2, switch_job=2)
+
+
+# ---------------------------------------------------------------------------
+# fairness metric
+# ---------------------------------------------------------------------------
+
+
+def test_jain_fairness_bounds():
+    assert ss.jain_fairness([5.0, 5.0, 5.0]) == pytest.approx(1.0)
+    assert ss.jain_fairness([1.0, 0.0, 0.0]) == pytest.approx(1 / 3)
+    assert 0.5 < ss.jain_fairness([2.0, 1.0]) < 1.0
