@@ -17,6 +17,7 @@ MODULES = [
     "fig13_queries",
     "fig_recovery",
     "fig_contention",
+    "fig_serve",
     "tab3_resource_util",
     "roofline",
 ]

@@ -217,6 +217,52 @@ def attention_decode(p, x, cfg, cache: KVCache, pos):
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
 
 
+def attention_decode_paged(p, x, cfg, k_pool, v_pool, page_table, lens):
+    """Paged-cache decode step for ONE layer.
+
+    x: (B, 1, d); k_pool/v_pool: (NP, page, K, hd) — this layer's slice of the
+    global page pool (page id 0 is reserved scratch); page_table: (B, MP)
+    int32 page ids per slot; lens: (B,) int32 tokens already cached per slot
+    (the position the new token is written at).
+
+    Per-slot generalization of :func:`attention_decode`: slot j writes its
+    new K/V at logical position ``lens[j]`` — physically page
+    ``page_table[j, lens[j] // page]`` offset ``lens[j] % page`` — then
+    attends over the gathered ``(MP * page,)`` view of its own pages, masked
+    at ``<= lens[j]``. With ``MP * page == max_len`` this is bit-identical to
+    the dense-cache decode: gathered allocated positions hold the same
+    values a dense cache would, and masked lanes exp-underflow to exactly
+    0.0 regardless of the (stale/foreign) garbage they hold. Distinct live
+    slots own disjoint pages (allocator invariant), so the scatter below has
+    no cross-slot index collisions; idle slots all target scratch page 0,
+    which no live slot ever reads.
+
+    Returns (out (B, 1, d), new k_pool, new v_pool).
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    kvh = cfg.num_kv_heads
+    g = cfg.num_heads // kvh
+    page = k_pool.shape[1]
+    positions = lens[:, None].astype(jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)
+    pidx = jnp.take_along_axis(page_table, (lens // page)[:, None], axis=1)[:, 0]
+    off = lens % page
+    k_pool = k_pool.at[pidx, off].set(k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[pidx, off].set(v[:, 0].astype(v_pool.dtype))
+    kg = k_pool[page_table].reshape(b, -1, kvh, hd)  # (B, MP*page, K, hd)
+    vg = v_pool[page_table].reshape(b, -1, kvh, hd)
+    qf = q.reshape(b, kvh, g, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qf, kg).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    valid = jnp.arange(kg.shape[1])[None, :] <= lens[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w.astype(vg.dtype), vg)
+    out = out.reshape(b, 1, cfg.num_heads, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), k_pool, v_pool
+
+
 # --- cross attention (whisper decoder) ---
 
 

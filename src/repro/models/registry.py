@@ -17,6 +17,10 @@ class Model(NamedTuple):
     prefill: Callable  # (params, batch, cache) -> (logits, cache)
     decode_step: Callable  # (params, tokens, cache) -> (logits, cache)
     init_cache: Callable  # (batch_size, max_len) -> cache
+    # (params, tokens (B,1), k_pools, v_pools, page_table (B,MP), lens (B,))
+    # -> (logits, k_pools, v_pools); None for families without a paged path
+    # (encdec; ssm/hybrid raise inside transformer.decode_step_paged)
+    decode_step_paged: Any = None
 
 
 def build(cfg: ModelConfig) -> Model:
@@ -29,6 +33,7 @@ def build(cfg: ModelConfig) -> Model:
             prefill=lambda p, b, c: encdec.prefill(p, b, c, cfg),
             decode_step=lambda p, t, c: encdec.decode_step(p, t, c, cfg),
             init_cache=lambda bs, ml: encdec.init_cache(cfg, bs, ml),
+            decode_step_paged=None,
         )
     return Model(
         cfg=cfg,
@@ -38,6 +43,10 @@ def build(cfg: ModelConfig) -> Model:
         prefill=lambda p, b, c: transformer.prefill(p, b, c, cfg),
         decode_step=lambda p, t, c: transformer.decode_step(p, t, c, cfg),
         init_cache=lambda bs, ml: transformer.init_cache(cfg, bs, ml),
+        decode_step_paged=(
+            None if cfg.family not in ("dense", "moe", "vlm") else
+            lambda p, t, kp, vp, pt, ln: transformer.decode_step_paged(
+                p, t, kp, vp, pt, ln, cfg)),
     )
 
 

@@ -341,6 +341,54 @@ def decode_step(params, tokens, cache: LMCache, cfg):
     return logits, new_cache
 
 
+def _dense_block_decode_paged(lp, x, cfg, k_pool, v_pool, page_table, lens):
+    h, k_pool, v_pool = attn.attention_decode_paged(
+        lp["attn"], rms_norm(x, lp["ln1"]["w"], cfg.norm_eps), cfg,
+        k_pool, v_pool, page_table, lens,
+    )
+    x = x + h
+    y = rms_norm(x, lp["ln2"]["w"], cfg.norm_eps)
+    if "moe" in lp:
+        out, _ = moe.apply_moe(lp["moe"], y, cfg)
+        if "dense_mlp" in lp:
+            out = out + apply_mlp(lp["dense_mlp"], y, cfg)
+    else:
+        out = apply_mlp(lp["mlp"], y, cfg)
+    return x + out, k_pool, v_pool
+
+
+def decode_step_paged(params, tokens, k_pools, v_pools, page_table, lens, cfg):
+    """Per-slot decode through a paged KV pool (continuous-batching serving).
+
+    tokens: (B, 1) int32; k_pools/v_pools: (L, NP, page, K, hd) global page
+    pools; page_table: (B, MP) int32; lens: (B,) int32 per-slot cache
+    lengths. Unlike :func:`decode_step` (one shared scalar position), every
+    slot advances at its OWN position — the shape continuous batching needs,
+    where slots hold requests admitted at different times. Only attention-KV
+    families page (dense/moe/vlm); ssm/hybrid keep per-slot recurrent state
+    that has no sequence axis to page.
+
+    Returns (logits (B, 1, V), new k_pools, new v_pools).
+    """
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"decode_step_paged supports dense/moe/vlm families, got "
+            f"{cfg.family!r} — use the static engine for ssm/hybrid")
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.activation_dtype))
+
+    def body(carry, xs):
+        lp, k_l, v_l = xs
+        y, k_l, v_l = _dense_block_decode_paged(
+            lp, carry, cfg, k_l, v_l, page_table, lens)
+        return y, (k_l, v_l)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], k_pools, v_pools))
+    x = rms_norm(x, params["final_norm"]["w"], cfg.norm_eps)
+    w = params["embed"]["tok"].T if cfg.tie_embeddings else params["head"]["w"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return logits, ks, vs
+
+
 def prefill(params, batch, cache: LMCache, cfg):
     """Run the full prompt through the model, filling caches.
 

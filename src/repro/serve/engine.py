@@ -1,10 +1,12 @@
-"""Batched serving engine: continuous prefill+decode over a request queue.
+"""Batched serving engine: static prefill+decode batches over a request queue.
 
 Production shape: requests arrive with prompts, get packed into a fixed batch
 with per-slot position tracking; a jitted prefill fills a fresh slot's cache
 region and a jitted decode step advances all active slots. Slot caches are
-per-request here (simple static batching); the dry-run decode shapes exercise
-the same decode_step the engine uses.
+per-request here (simple static batching); the continuous-batching engine in
+``repro.serve.scheduler`` replaces the lockstep batch with slot-level
+admission and a paged KV cache, and uses THIS engine as its bit-identity
+oracle (greedy per-request outputs must match token for token).
 
 Aggregation facade: the engine accepts the same ``AggConfig`` as the training
 stack (``repro.core.agg``). When given, per-batch serving telemetry (request
@@ -13,13 +15,14 @@ and generated-token counts) is reduced across the data axis through ONE
 paper also targets for telemetry/queries (cf. ``db/query.py``) — so the
 serving path exercises exactly the facade the trainers use, and a typo'd
 ``--agg-strategy`` fails at engine construction with the registered options,
-not mid-request.
+not mid-request. :class:`TelemetryChannel` is the shared implementation both
+engines route through.
 """
 from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Callable, List
+from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -43,9 +46,44 @@ class Result:
     tokens: np.ndarray
 
 
+class TelemetryChannel:
+    """Facade-backed serving telemetry: rows of per-request counters reduced
+    over the data axis through ONE :class:`Aggregator` — shard ``j % d``
+    contributes request j's counters, exactly like gradient shards. Shared by
+    the static and continuous engines (and by multi-tenant serving: an
+    ``AggConfig(switch_shared=...)`` routes these reductions over the shared
+    dataplane the training jobs use)."""
+
+    def __init__(self, agg: AggConfig, ncols: int, mesh=None):
+        self.ncols = ncols
+        self.mesh = mesh or compat.make_mesh((jax.device_count(),), ("data",))
+        # the ONE facade instance for this serving path — strategy/backend
+        # lookup and capability validation happen here, at engine build
+        self.aggregator = Aggregator(agg, ("data",))
+        self._reduce = jax.jit(compat.shard_map(
+            lambda rows: self.aggregator.allreduce(rows[0]),
+            mesh=self.mesh, in_specs=P("data", None), out_specs=P(),
+            check_vma=False))
+
+    def reduce(self, per_request_rows: Sequence[Sequence[float]]) -> List[int]:
+        """Reduce a batch of per-request counter rows to global totals."""
+        d = self.mesh.devices.size
+        rows = np.zeros((d, self.ncols), np.float32)
+        for j, r in enumerate(per_request_rows):
+            rows[j % d] += np.asarray(r, np.float32)
+        totals = np.asarray(self._reduce(jnp.asarray(rows)))
+        # round, don't truncate: narrow-wire strategies quantize (8.0 can
+        # come back 7.9999995) and int() would undercount permanently
+        return [int(round(float(t))) for t in totals]
+
+
 class ServeEngine:
     """Static-batch engine: groups requests into batches of `batch_size`,
-    prefills them together, then decodes greedily until all finish."""
+    prefills them together, then decodes greedily until all finish. Finished
+    slots are RETIRED from the lockstep batch (the decode batch shrinks to
+    the still-live slots), so a batch mixing 4- and 64-token budgets no
+    longer decodes every slot to the max — per-slot work stops at that
+    slot's own budget."""
 
     def __init__(self, model, params, batch_size: int, max_len: int,
                  sampler: str = "greedy", agg: AggConfig | None = None,
@@ -59,18 +97,16 @@ class ServeEngine:
         # telemetry aggregated through the facade (module doc): totals of
         # [requests, generated tokens] reduced over the data axis per batch
         self.telemetry = {"requests": 0, "tokens_generated": 0, "batches": 0,
-                          "decode_steps": 0, "rejected": 0, "truncated": 0}
-        self.aggregator = None
+                          "decode_steps": 0, "rejected": 0, "truncated": 0,
+                          "truncated_by_packing": 0, "slot_steps": 0}
+        self.telemetry_channel = None
         if agg is not None:
-            self._mesh = mesh or compat.make_mesh(
-                (jax.device_count(),), ("data",))
-            # the ONE facade instance for the serving path — strategy/backend
-            # lookup and capability validation happen here, at engine build
-            self.aggregator = Aggregator(agg, ("data",))
-            self._agg_telemetry = jax.jit(compat.shard_map(
-                lambda rows: self.aggregator.allreduce(rows[0]),
-                mesh=self._mesh, in_specs=P("data", None), out_specs=P(),
-                check_vma=False))
+            self.telemetry_channel = TelemetryChannel(agg, ncols=2, mesh=mesh)
+
+    @property
+    def aggregator(self):
+        ch = self.telemetry_channel
+        return None if ch is None else ch.aggregator
 
     def run(self, requests: List[Request]) -> List[Result]:
         admitted = self._admit(requests)
@@ -84,14 +120,21 @@ class ServeEngine:
         max_len)``, and a slot consumes ``len(prompt)`` positions at prefill
         plus one per decode step (the first generated token rides the prefill
         logits, costing no extra write). A request whose prompt alone
-        exceeds ``max_len`` is refused; one whose prompt fits but whose
-        ``max_new_tokens`` would run past the cache is truncated to the
-        ``max_len - len(prompt) + 1`` tokens that fit, with a warning.
-        Without this, over-length requests silently clobber the last cache
-        position and corrupt every later decode step in the batch."""
+        exceeds ``max_len`` — or is empty (nothing to prefill: the flash
+        q/kv chunking divides by the sequence length) — is refused; one
+        whose prompt fits but whose ``max_new_tokens`` would run past the
+        cache is truncated to the ``max_len - len(prompt) + 1`` tokens that
+        fit, with a warning. Without this, over-length requests silently
+        clobber the last cache position and corrupt every later decode step
+        in the batch."""
         admitted: List[Request] = []
         for r in requests:
             plen = len(r.prompt)
+            if plen == 0:
+                warnings.warn(
+                    f"request {r.rid}: zero-length prompt; rejected")
+                self.telemetry["rejected"] += 1
+                continue
             if plen > self.max_len:
                 warnings.warn(
                     f"request {r.rid}: prompt length {plen} exceeds engine "
@@ -115,15 +158,9 @@ class ServeEngine:
         the batch, exactly like gradient shards), host-side otherwise."""
         n_req = len(reqs)
         n_tok = sum(len(r.tokens) for r in results)
-        if self.aggregator is not None:
-            d = self._mesh.devices.size
-            rows = np.zeros((d, 2), np.float32)
-            for j in range(n_req):  # request j's stats live on shard j % d
-                rows[j % d] += (1.0, len(results[j].tokens))
-            agg_req, agg_tok = np.asarray(self._agg_telemetry(jnp.asarray(rows)))
-            # round, don't truncate: narrow-wire strategies quantize (8.0 can
-            # come back 7.9999995) and int() would undercount permanently
-            n_req, n_tok = int(round(float(agg_req))), int(round(float(agg_tok)))
+        if self.telemetry_channel is not None:
+            n_req, n_tok = self.telemetry_channel.reduce(
+                [(1.0, len(res.tokens)) for res in results])
         self.telemetry["requests"] += n_req
         self.telemetry["tokens_generated"] += n_tok
         self.telemetry["batches"] += 1
@@ -138,21 +175,45 @@ class ServeEngine:
         batch = {"tokens": jnp.asarray(toks)}
         logits, cache = self._prefill(self.params, batch, cache)
         new = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        gen = [new]
         # every slot's cache region starts at the BATCH prompt length
         # (left-padding): slot j can hold at most max_len - plen + 1 tokens
-        # however generous its own admission-time budget was
+        # however generous its own admission-time budget was. That packing
+        # shrinkage broke an admission-time promise silently — count it.
         effs = [min(r.max_new_tokens, self.max_len - plen + 1) for r in reqs]
-        # stop as soon as every slot holds its budget — not after the raw
-        # max(max_new_tokens), which overruns the cache for packed batches
-        while len(gen) < max(effs):
+        self.telemetry["truncated_by_packing"] += sum(
+            1 for r, e in zip(reqs, effs) if e < r.max_new_tokens)
+        # the retirement schedule is static (greedy budgets are known up
+        # front): slot j needs effs[j] tokens total, so after step t every
+        # slot with effs[j] <= t is done and is sliced OUT of the lockstep
+        # batch — decode width shrinks instead of burning max(effs) steps on
+        # every slot. Bitwise safe: decode rows are independent (pinned by
+        # tests/test_serve.py::test_static_engine_retirement_row_identity).
+        live = list(range(b))                    # original slot indices
+        steps = [(list(live), new)]              # (live slots, (len,1) toks)
+        t = 1                                    # tokens generated per slot
+        while t < max(effs):
+            keep = [i for i, j in enumerate(live) if effs[j] > t]
+            if len(keep) < len(live):
+                idx = np.asarray(keep, np.intp)
+                live = [live[i] for i in keep]
+                new = new[idx]
+                cache = jax.tree.map(
+                    lambda a: a if getattr(a, "ndim", 0) == 0 else a[:, idx],
+                    cache)
             logits, cache = self._decode(self.params, new, cache)
             new = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-            gen.append(new)
-        self.telemetry["decode_steps"] += len(gen) - 1
-        gen_np = np.concatenate([np.asarray(g) for g in gen], axis=1)
+            steps.append((list(live), new))
+            self.telemetry["slot_steps"] += len(live)
+            t += 1
+        self.telemetry["decode_steps"] += t - 1
+        rows: List[List[np.ndarray]] = [[] for _ in range(b)]
+        for live_j, col in steps:
+            col_np = np.asarray(col)
+            for i, j in enumerate(live_j):
+                if len(rows[j]) < effs[j]:
+                    rows[j].append(col_np[i, 0])
         results = [
-            Result(rid=r.rid, tokens=gen_np[j, : effs[j]])
+            Result(rid=r.rid, tokens=np.asarray(rows[j], np.int32))
             for j, r in enumerate(reqs)
         ]
         self._record_telemetry(reqs, results)

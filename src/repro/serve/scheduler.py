@@ -1,0 +1,460 @@
+"""Continuous-batching scheduler over a paged KV cache.
+
+The static :class:`~repro.serve.engine.ServeEngine` packs requests into
+lockstep batches: every batch prefills together (left-padded to the batch
+max) and the batch occupies its dense ``(b, max_len)`` cache until the
+longest slot finishes. This engine replaces that with request-level
+scheduling in the MaxText ``offline_inference.py`` shape:
+
+- a fixed pool of ``num_slots`` decode slots; queued requests are admitted
+  into free slots as soon as one opens (admission also reserves worst-case
+  KV pages — no admitted request can ever hit OOM mid-decode, exhaustion
+  shows up as queue backpressure instead);
+- prefill runs SEPARATELY from the running decode batch: newly admitted
+  prompts are prefilled unpadded (same-length prompts packed into one
+  prefill call), their K/V copied into pages, and their first token taken
+  from the prefill logits — the decode batch never stalls on a prompt;
+- one decode step advances ALL live slots through
+  ``model.decode_step_paged`` (per-slot positions, per-slot page tables);
+  a slot is retired the moment its request finishes, freeing its pages and
+  its slot for the next queued request;
+- per-request TTFT/TPOT latencies are emitted in scheduler-step units
+  (1 step == one decode iteration), plus wall-clock run time for goodput.
+
+Bit-identity contract: greedy per-request outputs equal the static engine's
+token for token (the static engine run per request is the oracle; see
+DESIGN.md §11 for why unpadded prefill + paged decode preserves every bit).
+
+Telemetry rides the ONE :class:`~repro.core.agg.Aggregator` facade
+(``TelemetryChannel``): per-retirement rows of [requests, tokens, decode
+steps, rejections] reduced over the data axis — including over a shared
+multi-tenant dataplane when the config carries ``switch_shared``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+import warnings
+from collections import deque
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agg import AggConfig
+from repro.serve.engine import Request, Result, TelemetryChannel
+from repro.serve.kvcache import PagedKVCache, pages_needed
+
+__all__ = ["ContinuousEngine", "RequestStats"]
+
+
+# ----------------------------------------------------------------------
+# fused device programs
+# ----------------------------------------------------------------------
+# One jitted call per scheduler event, shared across engine instances: the
+# model's bound functions ride along as static args, so a fresh engine over
+# the same model hits the same trace/compile cache (benchmarks warm one
+# engine and time another). Both programs fold the greedy argmax INTO the
+# jitted body — one dispatch per event and a (b,) int32 result instead of
+# full logits — and DONATE the KV pools, so XLA updates them in place
+# instead of copying ~the whole cache on every call. The greedy retirement
+# schedule is value-independent (fixed budgets, no stop token), so the
+# token feedback loop never has to touch the host: ``nxt`` feeds straight
+# back into the next decode and host materialization waits until
+# retirement (see ``ContinuousEngine._tok``).
+
+
+@partial(jax.jit, static_argnums=(0,), donate_argnums=(3, 4))
+def _decode_fused(decode_fn, p, toks, k_pool, v_pool, table, lens):
+    logits, k_pool, v_pool = decode_fn(p, toks, k_pool, v_pool, table, lens)
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    return nxt[:, None], k_pool, v_pool
+
+
+# NB: ``nxt`` (argnum 8) is NOT donated — that buffer is the previous decode
+# step's output and lives in the step history until every slot that
+# referenced it retires.
+@partial(jax.jit, static_argnums=(0, 1), donate_argnums=(5, 6))
+def _prefill_fused(prefill_fn, page, p, toks, cache, k_pool, v_pool, pages,
+                   nxt, rows):
+    """Prefill a same-length group unpadded, scatter its K/V into the
+    group's pages, and splice the first tokens into the decode feedback
+    vector — one device call per admission group."""
+    logits, cache = prefill_fn(p, {"tokens": toks}, cache)
+    first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    k, v = cache.kv.k, cache.kv.v                    # (L, n, s, K, hd)
+    L, n, s = k.shape[0], k.shape[1], k.shape[2]
+    npg = -(-s // page)
+    pad = npg * page - s
+    if pad:
+        padw = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+    kp = k.reshape(L, n * npg, page, *k.shape[3:])
+    vp = v.reshape(L, n * npg, page, *v.shape[3:])
+    k_pool = k_pool.at[:, pages].set(kp.astype(k_pool.dtype))
+    v_pool = v_pool.at[:, pages].set(vp.astype(v_pool.dtype))
+    return first, k_pool, v_pool, nxt.at[rows, 0].set(first)
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Per-request serving latencies, in scheduler-step time units."""
+    rid: int
+    t_arrival: float
+    t_admitted: float = math.nan
+    t_first_token: float = math.nan
+    t_finish: float = math.nan
+    n_prompt: int = 0
+    n_generated: int = 0
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token: queueing delay + prefill (prefill costs the
+        step it happens in)."""
+        return self.t_first_token - self.t_arrival
+
+    @property
+    def tpot(self) -> float:
+        """Time per output token after the first (nan for 1-token requests)."""
+        if self.n_generated <= 1:
+            return math.nan
+        return (self.t_finish - self.t_first_token) / (self.n_generated - 1)
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    budget: int          # effective max_new_tokens (post-admission)
+    cache_len: int       # tokens currently in the paged cache
+    reserved_pages: int  # worst-case pages charged at admission
+    # generated tokens as (step-id, flat index) refs into the on-device
+    # step history — materialized to host ints only at retirement, so the
+    # decode loop never blocks on a device->host sync
+    tokens: List[Tuple[int, int]]
+
+
+class ContinuousEngine:
+    """Throughput-first serving engine: continuous batching + paged KV.
+
+    Same admission semantics as the static engine (over-long / empty prompts
+    rejected, over-budget requests truncated to what the cache fits) so the
+    two engines see identical effective workloads; additionally a request
+    whose worst case exceeds the whole page pool is rejected up front, and a
+    request that fits *eventually* but not *now* simply waits in the queue
+    (backpressure, never OOM).
+    """
+
+    def __init__(self, model, params, num_slots: int, max_len: int,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 agg: AggConfig | None = None, mesh=None,
+                 max_prefill_per_step: Optional[int] = None):
+        if model.decode_step_paged is None:
+            raise ValueError(
+                f"model family {model.cfg.family!r} has no paged decode path; "
+                f"use the static ServeEngine")
+        self.model = model
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.cache = PagedKVCache(model.cfg, num_slots, max_len, page_size,
+                                  num_pages=num_pages)
+        self._decode = partial(_decode_fused, model.decode_step_paged)
+        self._prefill = partial(_prefill_fused, model.prefill,
+                                self.cache.page_size)
+        self._next = jnp.zeros((num_slots, 1), jnp.int32)
+        self._hist: Dict[int, object] = {}     # step id -> device tokens
+        self._hist_np: Dict[int, np.ndarray] = {}
+        self._sid = 0
+        self.max_prefill_per_step = max_prefill_per_step or num_slots
+        self.slots: List[Optional[_Slot]] = [None] * num_slots
+        self.queue: deque[Tuple[float, Request]] = deque()
+        self.now = 0.0
+        self.stats: Dict[int, RequestStats] = {}
+        self._reserved_total = 0
+        self.telemetry = {
+            "requests": 0, "tokens_generated": 0, "decode_steps": 0,
+            "prefills": 0, "prefill_tokens": 0, "rejected": 0,
+            "truncated": 0, "admitted": 0, "retired": 0, "queue_peak": 0,
+            "slot_steps": 0,
+        }
+        self.telemetry_channel = None
+        if agg is not None:
+            # [requests, tokens, decode steps, rejections] per flush window
+            self.telemetry_channel = TelemetryChannel(agg, ncols=4, mesh=mesh)
+        self._window = {"rows": [], "decode_steps": 0, "rejected": 0}
+
+    @property
+    def aggregator(self):
+        ch = self.telemetry_channel
+        return None if ch is None else ch.aggregator
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request, t_arrival: Optional[float] = None) -> bool:
+        """Queue a request (admission-checked). Returns False if rejected."""
+        t = self.now if t_arrival is None else t_arrival
+        r = self._check(req)
+        if r is None:
+            return False
+        self.stats[r.rid] = RequestStats(rid=r.rid, t_arrival=t,
+                                         n_prompt=len(r.prompt))
+        self.queue.append((t, r))
+        self.telemetry["queue_peak"] = max(self.telemetry["queue_peak"],
+                                           len(self.queue))
+        return True
+
+    def run(self, requests: Sequence[Request]) -> List[Result]:
+        """Serve a closed batch of requests all arriving at t=0."""
+        return self.run_trace([(0.0, r) for r in requests])
+
+    def run_trace(self, arrivals: Sequence[Tuple[float, Request]]
+                  ) -> List[Result]:
+        """Serve a timed trace of (arrival_time, request) pairs (time in
+        scheduler-step units, e.g. from ``repro.serve.loadgen``). Returns
+        results in COMPLETION order; per-request latencies land in
+        ``self.stats[rid]``. Wall-clock run time lands in
+        ``self.last_wall_s``."""
+        pending = deque(sorted(arrivals, key=lambda a: a[0]))
+        results: List[Result] = []
+        t0 = time.perf_counter()
+        guard = 0
+        limit = 16 * (len(pending) + 1) * (self.max_len + 2)
+        while pending or self.queue or any(self.slots):
+            guard += 1
+            if guard > limit:  # pragma: no cover - scheduler invariant
+                raise RuntimeError("scheduler failed to drain the trace")
+            while pending and pending[0][0] <= self.now:
+                t, r = pending.popleft()
+                self.submit(r, t)
+            results.extend(self._admit_from_queue())
+            if not any(self.slots):
+                if self.queue:
+                    # backpressure with idle slots cannot deadlock: pages are
+                    # only held by live slots, and _check caps worst cases at
+                    # the pool size — so an empty slot table means the queue
+                    # head is admissible next iteration.
+                    continue
+                if pending:
+                    self.now = max(self.now + 1.0,
+                                   float(math.ceil(pending[0][0])))
+                    continue
+                break
+            results.extend(self._decode_step())
+        self._flush_telemetry()
+        self._hist.clear()       # all slots retired: history fully drained
+        self._hist_np.clear()
+        self.last_wall_s = time.perf_counter() - t0
+        return results
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+
+    def _check(self, r: Request) -> Optional[Request]:
+        """Static-engine admission semantics + a whole-pool feasibility
+        check; returns the (possibly truncated) request or None."""
+        plen = len(r.prompt)
+        if plen == 0:
+            warnings.warn(f"request {r.rid}: zero-length prompt; rejected")
+            self._reject()
+            return None
+        if plen > self.max_len:
+            warnings.warn(
+                f"request {r.rid}: prompt length {plen} exceeds engine "
+                f"max_len={self.max_len}; rejected")
+            self._reject()
+            return None
+        fit = self.max_len - plen + 1
+        if r.max_new_tokens > fit:
+            warnings.warn(
+                f"request {r.rid}: max_new_tokens={r.max_new_tokens} "
+                f"does not fit the KV cache after a {plen}-token prompt; "
+                f"truncated to {fit}")
+            self.telemetry["truncated"] += 1
+            r = dataclasses.replace(r, max_new_tokens=fit)
+        if self._worst_case_pages(plen, r.max_new_tokens) > \
+                self.cache.allocator.num_pages:
+            warnings.warn(
+                f"request {r.rid}: needs more KV pages than the whole pool "
+                f"({self.cache.allocator.num_pages}); rejected")
+            self._reject()
+            return None
+        return r
+
+    def _reject(self):
+        self.telemetry["rejected"] += 1
+        self._window["rejected"] += 1
+
+    def _worst_case_pages(self, plen: int, budget: int) -> int:
+        # positions used: prompt [0, plen) plus budget-1 decode writes
+        # (the first generated token rides the prefill logits)
+        return pages_needed(plen + budget - 1, self.cache.page_size)
+
+    def _admit_from_queue(self) -> List[Result]:
+        """Admit queue-head requests into free slots while both a slot and
+        the worst-case page reservation are available (FIFO — no head-of-
+        line bypass, so admission order is deterministic). Same-length
+        prompts admitted in the same step share one packed prefill call.
+        Returns results for requests whose budget is 1 (their single token
+        rides the prefill — they retire without ever entering the decode
+        batch)."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        picked: List[Tuple[int, float, Request]] = []
+        while (free and self.queue
+               and len(picked) < self.max_prefill_per_step):
+            t_arr, r = self.queue[0]
+            wc = self._worst_case_pages(len(r.prompt), r.max_new_tokens)
+            if self._reserved_total + wc > self.cache.allocator.num_pages:
+                break  # backpressure: head waits for pages to free up
+            self.queue.popleft()
+            slot = free.pop(0)
+            self._reserved_total += wc
+            picked.append((slot, t_arr, r))
+        results: List[Result] = []
+        if not picked:
+            return results
+        # pack prefills by prompt length: identical lengths need no padding,
+        # so a packed (n, s) prefill stays bit-identical per row
+        by_len: Dict[int, List[Tuple[int, float, Request]]] = {}
+        for slot, t_arr, r in picked:
+            by_len.setdefault(len(r.prompt), []).append((slot, t_arr, r))
+        for plen, group in sorted(by_len.items()):
+            results.extend(self._prefill_group(plen, group))
+        return results
+
+    def _prefill_group(self, plen: int,
+                       group: List[Tuple[int, float, Request]]) -> List[Result]:
+        n = len(group)
+        toks = np.stack([r.prompt for _, _, r in group]).astype(np.int32)
+        npg = pages_needed(plen, self.cache.page_size)
+        rows, pages = [], []
+        for slot, _, r in group:
+            ok = self.cache.grow_slot(slot, plen)
+            assert ok, "reservation accounting must cover the prompt pages"
+            rows.append(slot)
+            pages.extend(self.cache.slot_pages(slot)[:npg])
+        cache = self.model.init_cache(n, plen)
+        first, self.cache.k, self.cache.v, self._next = self._prefill(
+            self.params, jnp.asarray(toks), cache, self.cache.k, self.cache.v,
+            jnp.asarray(np.asarray(pages, np.int32)), self._next,
+            jnp.asarray(np.asarray(rows, np.int32)))
+        sid = self._sid
+        self._sid += 1
+        self._hist[sid] = first
+        self.telemetry["prefills"] += 1
+        self.telemetry["prefill_tokens"] += n * plen
+        results: List[Result] = []
+        for i, (slot, t_arr, r) in enumerate(group):
+            st = self.stats[r.rid]
+            st.t_admitted = self.now
+            st.t_first_token = self.now
+            s = _Slot(req=r, budget=r.max_new_tokens, cache_len=plen,
+                      reserved_pages=self._worst_case_pages(plen,
+                                                            r.max_new_tokens),
+                      tokens=[(sid, i)])
+            self.telemetry["admitted"] += 1
+            if s.budget == 1:
+                # single-token request: its one token rode the prefill
+                # logits — it retires without entering the decode batch
+                results.append(self._retire(slot, s))
+            else:
+                self.slots[slot] = s
+        return results
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+
+    def _decode_step(self) -> List[Result]:
+        """One lockstep decode over every live slot (idle slots ride along
+        pointed at the scratch page; their logits are discarded). The next
+        input token comes straight off the previous step's on-device argmax
+        (``self._next``) — no host round-trip in the loop."""
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        lens = np.zeros((self.num_slots,), np.int32)
+        for i in active:
+            s = self.slots[i]
+            ok = self.cache.grow_slot(i, s.cache_len + 1)
+            assert ok, "reservation accounting must cover decode growth"
+            lens[i] = s.cache_len
+        self._next, self.cache.k, self.cache.v = self._decode(
+            self.params, self._next, self.cache.k, self.cache.v,
+            self.cache.device_table(), jnp.asarray(lens))
+        sid = self._sid
+        self._sid += 1
+        self._hist[sid] = self._next
+        self.now += 1.0
+        self.telemetry["decode_steps"] += 1
+        self.telemetry["slot_steps"] += len(active)
+        self._window["decode_steps"] += 1
+        results: List[Result] = []
+        for i in active:
+            s = self.slots[i]
+            s.cache_len += 1
+            s.tokens.append((sid, i))
+            if len(s.tokens) >= s.budget:
+                results.append(self._retire(i, s))
+                self.slots[i] = None
+        return results
+
+    # ------------------------------------------------------------------
+    # retirement + telemetry
+    # ------------------------------------------------------------------
+
+    def _tok(self, sid: int, idx: int) -> int:
+        """Materialize one generated token from the on-device step history
+        (each step's (b,) token vector syncs to host at most once)."""
+        buf = self._hist_np.get(sid)
+        if buf is None:
+            buf = np.asarray(self._hist[sid]).ravel()
+            self._hist_np[sid] = buf
+        return int(buf[idx])
+
+    def _retire(self, slot: int, s: _Slot) -> Result:
+        self.cache.release_slot(slot)
+        self._reserved_total -= s.reserved_pages
+        st = self.stats[s.req.rid]
+        st.t_finish = self.now
+        st.n_generated = len(s.tokens)
+        self.telemetry["retired"] += 1
+        res = Result(rid=s.req.rid,
+                     tokens=np.asarray([self._tok(sid, i)
+                                        for sid, i in s.tokens], np.int32))
+        if self.telemetry_channel is None:
+            self.telemetry["requests"] += 1
+            self.telemetry["tokens_generated"] += len(res.tokens)
+        else:
+            self._window["rows"].append((1.0, float(len(res.tokens))))
+            if len(self._window["rows"]) >= self.num_slots:
+                self._flush_telemetry()
+        return res
+
+    def _flush_telemetry(self):
+        """Push the window's [requests, tokens, decode steps, rejections]
+        through the facade (when configured) and fold into the totals —
+        every retirement window is one facade reduction, the serving-path
+        analogue of a per-batch gradient aggregation."""
+        w = self._window
+        if self.telemetry_channel is None:
+            return
+        if not (w["rows"] or w["decode_steps"] or w["rejected"]):
+            return
+        rows = [(nreq, ntok, 0.0, 0.0) for nreq, ntok in w["rows"]]
+        rows.append((0.0, 0.0, float(w["decode_steps"]), float(w["rejected"])))
+        n_req, n_tok, _steps, _rej = self.telemetry_channel.reduce(rows)
+        self.telemetry["requests"] += n_req
+        self.telemetry["tokens_generated"] += n_tok
+        self._window = {"rows": [], "decode_steps": 0, "rejected": 0}
+
+    # ------------------------------------------------------------------
+    # reporting
+    # ------------------------------------------------------------------
+
+    def latency_stats(self) -> List[RequestStats]:
+        return [st for st in self.stats.values()
+                if not math.isnan(st.t_finish)]

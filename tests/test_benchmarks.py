@@ -22,6 +22,7 @@ MODULES = [
     "fig13_queries",
     "fig_recovery",
     "fig_contention",
+    "fig_serve",
     "tab3_resource_util",
     "roofline",
 ]
@@ -62,6 +63,20 @@ SCHEMAS = {
                      "steps_to_recover", "reclaimed", "survivor_mesh",
                      "recovery_overhead_x", "pre_failure_tok_s",
                      "post_failure_tok_s", "bit_identical"],
+    },
+    "serve": {
+        "workload": ["n_requests", "num_slots", "max_len", "page_size",
+                     "rate", "prompt_lens", "max_new", "seed"],
+        "static": ["goodput_tok_s", "wall_s", "tokens", "decode_steps",
+                   "slot_steps", "truncated_by_packing", "ttft_p50",
+                   "ttft_p99", "tpot_p50", "tpot_p99"],
+        "continuous": ["goodput_tok_s", "wall_s", "tokens", "decode_steps",
+                       "slot_steps", "prefills", "queue_peak", "ttft_p50",
+                       "ttft_p99", "tpot_p50", "tpot_p99", "kv_pages_peak",
+                       "kv_tokens_peak"],
+        "comparison": ["goodput_ratio", "goodput_target", "goodput_ok",
+                       "kv_pages_peak_tokens", "dense_cache_tokens",
+                       "paged_lt_dense", "bit_identical"],
     },
     "contention": {
         "config": ["num_jobs", "num_slots", "drop_prob", "priorities",
@@ -132,3 +147,11 @@ def test_benchmark_suite_smoke(tmp_path):
     assert con["query"]["max_rel_err"] < 1e-3
     assert 0.0 < con["fairness"]["jain_normalized"] <= 1.0
     assert len(con["jobs"]) == 3
+    # the ISSUE-7 serving invariants hold at smoke size: the continuous
+    # engine's greedy outputs are bit-identical to the per-request static
+    # oracle and peak paged KV stays under the dense footprint (the >= 1.3x
+    # goodput target is a full-size timing claim — smoke is too noisy)
+    srv = json.loads((tmp_path / "BENCH_serve.json").read_text())["results"]
+    assert srv["comparison"]["bit_identical"] is True
+    assert srv["comparison"]["paged_lt_dense"] is True
+    assert srv["continuous"]["kv_pages_peak"] > 0

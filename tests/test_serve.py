@@ -1,0 +1,393 @@
+"""Serving-path suite: continuous batching + paged KV cache (ISSUE 7).
+
+Pins the three contracts the scheduler/allocator pair must keep:
+
+1. admission edges — prompt == max_len, max_new == exact fit, zero-length
+   and over-length prompts, whole-pool-infeasible requests;
+2. paged-allocator invariants — no double-free, deterministic page reuse
+   after retirement, pool exhaustion surfaces as queue backpressure (never a
+   crash or a partial allocation);
+3. bit-identity — the continuous engine's greedy per-request outputs equal
+   the static engine's token for token (static run per request is the
+   oracle: unpadded prompts at true positions), and the static engine's own
+   slot-retirement optimization keeps batch rows identical to b=1 runs.
+"""
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.agg import AggConfig
+from repro.models.registry import build
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.kvcache import PageAllocator, PagedKVCache, pages_needed
+from repro.serve.loadgen import PoissonLoadGen, latency_report, percentile
+from repro.serve.scheduler import ContinuousEngine
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompt(rng, n, vocab):
+    return rng.integers(0, vocab, n).astype(np.int32)
+
+
+def _oracle(model, params, reqs, max_len):
+    """Static engine, one request per run: the bit-identity reference."""
+    out = {}
+    for r in reqs:
+        eng = ServeEngine(model, params, batch_size=1, max_len=max_len)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            res = eng.run([Request(r.rid, np.array(r.prompt), r.max_new_tokens)])
+        if res:
+            out[r.rid] = res[0].tokens
+    return out
+
+
+# ---------------------------------------------------------------------------
+# allocator invariants
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_roundtrip_and_reuse():
+    a = PageAllocator(num_pages=4, page_size=8)
+    first = a.alloc(3)
+    assert first == [1, 2, 3] and a.in_use == 3 and a.available == 1
+    a.free([2])
+    # freed page is reused, lowest id first — deterministic placement
+    assert a.alloc(2) == [2, 4]
+    assert a.in_use == 4 and a.peak_in_use == 4
+
+
+def test_allocator_no_double_free():
+    a = PageAllocator(num_pages=2, page_size=8)
+    pages = a.alloc(2)
+    a.free(pages)
+    with pytest.raises(ValueError, match="double free"):
+        a.free([pages[0]])
+    with pytest.raises(ValueError, match="double free"):
+        a.free([99])  # never-allocated id
+
+
+def test_allocator_exhaustion_is_not_partial():
+    a = PageAllocator(num_pages=3, page_size=8)
+    assert a.alloc(2) is not None
+    assert a.alloc(2) is None  # only 1 left: refuse whole request
+    assert a.available == 1    # nothing was taken by the failed alloc
+    assert a.alloc(1) is not None
+
+
+def test_pages_needed():
+    assert pages_needed(0, 8) == 0
+    assert pages_needed(1, 8) == 1
+    assert pages_needed(8, 8) == 1
+    assert pages_needed(9, 8) == 2
+
+
+def test_paged_cache_shape_and_family_guards(served):
+    cfg, model, params = served
+    with pytest.raises(ValueError, match="must divide"):
+        PagedKVCache(cfg, num_slots=2, max_len=30, page_size=8)
+    ssm_cfg = get_smoke_config("mamba2-780m")
+    with pytest.raises(ValueError, match="paged KV serving supports"):
+        PagedKVCache(ssm_cfg, num_slots=2, max_len=32, page_size=8)
+
+
+def test_paged_cache_slot_isolation(served):
+    cfg, _, _ = served
+    cache = PagedKVCache(cfg, num_slots=3, max_len=32, page_size=8)
+    assert cache.grow_slot(0, 9)   # 2 pages
+    assert cache.grow_slot(2, 17)  # 3 pages
+    p0, p2 = set(cache.slot_pages(0)), set(cache.slot_pages(2))
+    assert p0 and p2 and not (p0 & p2), "live slots must own disjoint pages"
+    assert 0 not in p0 | p2, "scratch page 0 is never allocated"
+    cache.release_slot(0)
+    assert (cache.page_table[0] == 0).all()
+    assert cache.pages_in_use == 3
+    # released pages are available again
+    assert cache.grow_slot(1, 32)  # 4 pages — needs the freed ones
+    assert cache.pages_in_use == 7
+
+
+def test_engine_requires_paged_decode_path(served):
+    _, _, params = served
+    ssm_model = build(get_smoke_config("mamba2-780m"))
+    with pytest.raises(ValueError, match="no paged decode path"):
+        ContinuousEngine(ssm_model, None, num_slots=2, max_len=32)
+
+
+# ---------------------------------------------------------------------------
+# admission edges
+# ---------------------------------------------------------------------------
+
+
+def test_admission_zero_length_prompt_rejected_both_engines(served):
+    cfg, model, params = served
+    bad = Request(rid=0, prompt=np.zeros((0,), np.int32), max_new_tokens=4)
+    eng = ContinuousEngine(model, params, num_slots=2, max_len=16)
+    with pytest.warns(UserWarning, match="zero-length"):
+        assert eng.run([bad]) == []
+    assert eng.telemetry["rejected"] == 1
+    static = ServeEngine(model, params, batch_size=2, max_len=16)
+    with pytest.warns(UserWarning, match="zero-length"):
+        assert static.run([Request(0, np.zeros((0,), np.int32), 4)]) == []
+    assert static.telemetry["rejected"] == 1
+
+
+def test_admission_overlong_prompt_rejected(served):
+    cfg, model, params = served
+    rng = np.random.default_rng(0)
+    eng = ContinuousEngine(model, params, num_slots=2, max_len=16)
+    with pytest.warns(UserWarning, match="rejected"):
+        out = eng.run([Request(0, _prompt(rng, 17, cfg.vocab_size), 2)])
+    assert out == [] and eng.telemetry["rejected"] == 1
+
+
+def test_admission_prompt_equals_max_len(served):
+    """A full-cache prompt still yields its one prefill-logits token, with
+    zero decode steps, identical to the static oracle."""
+    cfg, model, params = served
+    rng = np.random.default_rng(1)
+    req = Request(rid=0, prompt=_prompt(rng, 16, cfg.vocab_size),
+                  max_new_tokens=7)
+    eng = ContinuousEngine(model, params, num_slots=2, max_len=16,
+                           page_size=8)
+    with pytest.warns(UserWarning, match="truncated to 1"):
+        (res,) = eng.run([req])
+    assert res.tokens.shape == (1,)
+    assert eng.telemetry["decode_steps"] == 0
+    oracle = _oracle(model, params, [req], max_len=16)
+    np.testing.assert_array_equal(res.tokens, oracle[0])
+
+
+def test_admission_max_new_exactly_fits(served):
+    """max_new == max_len - plen + 1: admitted untruncated, fills the cache
+    to the last position without overrun."""
+    cfg, model, params = served
+    rng = np.random.default_rng(2)
+    req = Request(rid=3, prompt=_prompt(rng, 6, cfg.vocab_size),
+                  max_new_tokens=11)  # 16 - 6 + 1
+    eng = ContinuousEngine(model, params, num_slots=1, max_len=16,
+                           page_size=4)
+    (res,) = eng.run([req])
+    assert res.tokens.shape == (11,)
+    assert eng.telemetry["truncated"] == 0
+    oracle = _oracle(model, params, [req], max_len=16)
+    np.testing.assert_array_equal(res.tokens, oracle[3])
+
+
+def test_admission_whole_pool_infeasible_rejected(served):
+    """A request whose worst case exceeds the ENTIRE pool can never be
+    scheduled — reject at submit instead of queueing it forever."""
+    cfg, model, params = served
+    rng = np.random.default_rng(3)
+    eng = ContinuousEngine(model, params, num_slots=2, max_len=32,
+                           page_size=8, num_pages=2)  # pool: 16 tokens
+    with pytest.warns(UserWarning, match="whole pool"):
+        out = eng.run([Request(0, _prompt(rng, 20, cfg.vocab_size), 4)])
+    assert out == [] and eng.telemetry["rejected"] == 1
+
+
+# ---------------------------------------------------------------------------
+# backpressure: OOM becomes queueing, never a crash
+# ---------------------------------------------------------------------------
+
+
+def test_pool_exhaustion_backpressures_queue(served):
+    """Pool of 4 pages (32 token positions) against 6 requests wanting
+    ~13 positions each: admission throttles to what fits, every request
+    still completes, and in-use never exceeds the pool."""
+    cfg, model, params = served
+    rng = np.random.default_rng(4)
+    eng = ContinuousEngine(model, params, num_slots=3, max_len=32,
+                           page_size=8, num_pages=4)
+    reqs = [Request(rid=i, prompt=_prompt(rng, 8, cfg.vocab_size),
+                    max_new_tokens=6) for i in range(6)]
+    res = eng.run(reqs)
+    assert sorted(r.rid for r in res) == list(range(6))
+    assert eng.cache.peak_pages_in_use <= 4
+    assert eng.cache.pages_in_use == 0  # everything released at retirement
+    assert eng.telemetry["queue_peak"] >= 2  # backpressure actually queued
+    oracle = _oracle(model, params, reqs, max_len=32)
+    for r in res:
+        np.testing.assert_array_equal(r.tokens, oracle[r.rid])
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: continuous == static oracle
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_matches_static_oracle_mixed_poisson(served):
+    """The headline contract: greedy per-request outputs from the
+    continuous engine equal the static engine's token for token on a mixed
+    prompt/budget Poisson workload, while peak paged KV stays below the
+    dense batch_size * max_len footprint."""
+    cfg, model, params = served
+    lg = PoissonLoadGen(rate=0.7, prompt_lens=(4, 8, 12), max_new=(2, 5, 9),
+                        vocab_size=cfg.vocab_size, seed=7)
+    trace = lg.trace(12)
+    eng = ContinuousEngine(model, params, num_slots=4, max_len=32,
+                           page_size=8)
+    res = eng.run_trace([(t, r) for t, r in trace])
+    assert len(res) == 12
+    oracle = _oracle(model, params, [r for _, r in trace], max_len=32)
+    for r in res:
+        np.testing.assert_array_equal(r.tokens, oracle[r.rid])
+    # paged footprint beats dense for this mixed workload
+    assert eng.cache.peak_pages_in_use * 8 < eng.cache.dense_equivalent_tokens
+    # latency accounting is complete and sane
+    stats = eng.latency_stats()
+    assert len(stats) == 12
+    rep = latency_report(stats, slo_ttft=50.0)
+    assert rep["ttft_p50"] >= 0 and rep["ttft_slo_attainment"] > 0
+
+
+def test_static_engine_retirement_row_identity(served):
+    """The static engine's slot retirement (decode batch shrinks as budgets
+    finish) must not change any request's tokens: uniform-length batch rows
+    == per-request runs, and slot_steps < b * max(effs) shows work actually
+    stopped at each slot's own budget."""
+    cfg, model, params = served
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i, prompt=_prompt(rng, 6, cfg.vocab_size),
+                    max_new_tokens=m) for i, m in enumerate((3, 8, 2, 5))]
+    eng = ServeEngine(model, params, batch_size=4, max_len=32)
+    out = {r.rid: r.tokens for r in eng.run(
+        [Request(r.rid, np.array(r.prompt), r.max_new_tokens) for r in reqs])}
+    oracle = _oracle(model, params, reqs, max_len=32)
+    for rid, toks in out.items():
+        np.testing.assert_array_equal(toks, oracle[rid])
+    assert eng.telemetry["decode_steps"] == 7  # max(effs) - 1, unchanged
+    # 4 slots x 7 lockstep steps = 28; retirement reduces live work to
+    # sum(effs) - 4 = 14
+    assert eng.telemetry["slot_steps"] == 14
+
+
+def test_static_truncated_by_packing_counter(served):
+    """Left-pad packing shrinking an admitted budget is now counted."""
+    cfg, model, params = served
+    rng = np.random.default_rng(6)
+    long_p = Request(rid=0, prompt=_prompt(rng, 12, cfg.vocab_size),
+                     max_new_tokens=5)
+    short_p = Request(rid=1, prompt=_prompt(rng, 2, cfg.vocab_size),
+                      max_new_tokens=8)  # admitted, then packed down to 5
+    eng = ServeEngine(model, params, batch_size=2, max_len=16)
+    res = eng.run([long_p, short_p])
+    assert [r.tokens.shape for r in res] == [(5,), (5,)]
+    assert eng.telemetry["truncated_by_packing"] == 1
+    assert eng.telemetry["truncated"] == 0  # admission itself passed
+
+
+def test_continuous_never_truncates_by_packing(served):
+    """The continuous engine prefills unpadded, so the packing shrinkage the
+    static engine must count simply cannot happen: the same short+long pair
+    keeps the short request's full admitted budget."""
+    cfg, model, params = served
+    rng = np.random.default_rng(6)
+    long_p = Request(rid=0, prompt=_prompt(rng, 12, cfg.vocab_size),
+                     max_new_tokens=5)
+    short_p = Request(rid=1, prompt=_prompt(rng, 2, cfg.vocab_size),
+                      max_new_tokens=8)
+    eng = ContinuousEngine(model, params, num_slots=2, max_len=16,
+                           page_size=8)
+    out = {r.rid: r.tokens for r in eng.run([long_p, short_p])}
+    assert out[0].shape == (5,)
+    assert out[1].shape == (8,)  # full budget — no batch-max packing cap
+
+
+# ---------------------------------------------------------------------------
+# telemetry through the facade (incl. shared multi-tenant dataplane)
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_telemetry_through_facade(served):
+    cfg, model, params = served
+    rng = np.random.default_rng(8)
+    reqs = [Request(rid=i, prompt=_prompt(rng, 5, cfg.vocab_size),
+                    max_new_tokens=4) for i in range(5)]
+    plain = ContinuousEngine(model, params, num_slots=2, max_len=16,
+                             page_size=8)
+    plain.run([Request(r.rid, np.array(r.prompt), r.max_new_tokens)
+               for r in reqs])
+    agg = ContinuousEngine(model, params, num_slots=2, max_len=16,
+                           page_size=8, agg=AggConfig(strategy="fpisa"))
+    agg.run(reqs)
+    assert agg.aggregator is not None
+    for key in ("requests", "tokens_generated", "decode_steps", "rejected"):
+        assert agg.telemetry[key] == plain.telemetry[key], key
+
+
+def test_continuous_telemetry_over_shared_multitenant_dataplane(served):
+    """The serving engine rides a PR 6 shared dataplane as one tenant: its
+    telemetry reductions land on the same named switch another job uses,
+    counters stay exact, and the switch's per-job stats see serving traffic."""
+    from repro import switchsim as ss
+
+    cfg, model, params = served
+    rng = np.random.default_rng(9)
+    ss.reset_shared_dataplanes()
+    try:
+        reqs = [Request(rid=i, prompt=_prompt(rng, 5, cfg.vocab_size),
+                        max_new_tokens=3) for i in range(3)]
+        eng = ContinuousEngine(
+            model, params, num_slots=2, max_len=16, page_size=8,
+            agg=AggConfig(strategy="switch_emu", switch_shared="serve-test",
+                          switch_jobs=2, switch_job=1))
+        eng.run(reqs)
+        assert eng.telemetry["requests"] == 3
+        assert eng.telemetry["tokens_generated"] == 9
+        w = jax.device_count()  # the telemetry mesh spans every device
+        dp = ss.shared_dataplane(
+            "serve-test",
+            ss.DataplaneConfig(num_workers=w, num_slots=8,
+                               elems_per_packet=256, fmt_name="fp32",
+                               variant="fpisa_a", num_jobs=2,
+                               job_workers=(w, w)))
+        assert dp.job_stats[1]["packets"] > 0  # serving tenant really used it
+    finally:
+        ss.reset_shared_dataplanes()
+
+
+# ---------------------------------------------------------------------------
+# load generator
+# ---------------------------------------------------------------------------
+
+
+def test_loadgen_trace_shape_and_determinism():
+    lg = PoissonLoadGen(rate=0.5, prompt_lens=(4, 8), max_new=(2, 6),
+                        vocab_size=97, seed=11)
+    a, b = lg.trace(20), lg.trace(20)
+    assert len(a) == 20
+    times = [t for t, _ in a]
+    assert times == sorted(times) and times[0] > 0
+    for (ta, ra), (tb, rb) in zip(a, b):  # same seed -> same trace
+        assert ta == tb and ra.max_new_tokens == rb.max_new_tokens
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+    assert {len(r.prompt) for _, r in a} <= {4, 8}
+    assert {r.max_new_tokens for _, r in a} <= {2, 6}
+    assert all(r.prompt.max() < 97 for _, r in a)
+
+
+def test_loadgen_mean_interarrival_tracks_rate():
+    lg = PoissonLoadGen(rate=2.0, seed=0)
+    times = [t for t, _ in lg.trace(600)]
+    gaps = np.diff([0.0] + times)
+    assert abs(gaps.mean() - 0.5) < 0.1  # 1/rate
+
+
+def test_percentile_and_report_edges():
+    assert math.isnan(percentile([], 50))
+    assert percentile([1.0, math.nan, 3.0], 50) == 2.0
+    rep = latency_report([], slo_ttft=1.0)
+    assert math.isnan(rep["ttft_p50"]) and rep["n"] == 0
