@@ -70,7 +70,11 @@ def run() -> None:
     cfg = get_smoke_config("qwen1.5-0.5b")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    trace = lg.trace(n_requests)
+    # ONE explicitly seeded Generator threaded through every stochastic
+    # draw of the benchmark (loadgen contract) — BENCH_serve.json must be
+    # reproducible across processes
+    bench_rng = np.random.default_rng(lg.seed)
+    trace = lg.trace(n_requests, rng=bench_rng)
     reqs = [r for _, r in trace]
 
     def fresh(rs):

@@ -75,7 +75,7 @@ class FpisaSwitch:
     @property
     def stats(self) -> dict:
         s = self._dp.stats
-        return {k: s[k] for k in switchsim.dataplane.COUNTERS}
+        return {k: s[k] for k in switchsim.COUNTERS}
 
     @property
     def job_stats(self) -> list:

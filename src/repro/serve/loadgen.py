@@ -43,9 +43,21 @@ class PoissonLoadGen:
     vocab_size: int = 256
     seed: int = 0
 
-    def trace(self, n: int) -> List[Tuple[float, Request]]:
-        """Generate ``n`` arrivals as (t_arrival, Request), time-sorted."""
-        rng = np.random.default_rng(self.seed)
+    def trace(self, n: int,
+              rng: Optional[np.random.Generator] = None,
+              ) -> List[Tuple[float, Request]]:
+        """Generate ``n`` arrivals as (t_arrival, Request), time-sorted.
+
+        Every stochastic draw comes from ONE explicitly seeded
+        ``np.random.Generator`` — pass ``rng`` to thread a caller-owned
+        stream (e.g. one Generator shared by a whole benchmark run, as
+        ``benchmarks/fig_serve.py`` does, so BENCH_serve.json is
+        reproducible across processes); by default a fresh
+        ``default_rng(self.seed)`` makes repeated ``trace`` calls
+        identical. The RNG-DISCIPLINE lint rule (tools/repro_lint) pins
+        the no-global-state half of this contract repo-wide."""
+        if rng is None:
+            rng = np.random.default_rng(self.seed)
         pw = self._norm(self.prompt_weights, len(self.prompt_lens))
         nw = self._norm(self.max_new_weights, len(self.max_new))
         t = 0.0

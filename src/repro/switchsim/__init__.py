@@ -23,8 +23,31 @@ Modules
 
 ``core/switch.py`` remains the compatibility shim: its ``FpisaSwitch`` is now
 a one-packet-at-a-time view over a single-pipeline ``BatchedDataplane``.
+
+Shared structural constants
+---------------------------
+``COUNTERS`` and ``SLOT_STATE_FIELDS`` are defined HERE, once, and imported
+by all three dataplanes (batched jit, numpy mirror, per-packet shim). They
+are the mirror contract: the ``mirror-parity`` lint rule
+(tools/repro_lint) checks that no mirror re-defines them as literals and
+that each dataplane's state layout matches, so a counter or slot-state
+field added to one implementation cannot silently drift from the others.
+They must stay above the submodule imports below — ``dataplane`` imports
+them back from this (partially-initialized) package at import time.
 """
-from repro.switchsim.dataplane import (  # noqa: F401
+# per-job dataplane counters, in on-wire index order (the counters plane is
+# (num_jobs, len(COUNTERS)) in every implementation)
+COUNTERS = ("packets", "duplicates", "stale", "overwrite", "overflow",
+            "reclaimed", "admission_denied", "preempted")
+
+# per-slot/per-plane state fields, in DataplaneState order. The jitted
+# dataplane carries them as NamedTuple fields; the numpy mirror as the
+# underscore-prefixed attributes (``exp`` -> ``self._exp``).
+SLOT_STATE_FIELDS = ("exp", "man", "seen", "slot_chunk", "result",
+                     "result_valid", "counters", "recirc", "live",
+                     "slot_job", "last_touch")
+
+from repro.switchsim.dataplane import (  # noqa: E402,F401
     BatchedDataplane,
     DataplaneConfig,
     DataplaneState,
@@ -37,7 +60,7 @@ from repro.switchsim.dataplane import (  # noqa: F401
     slot_of,
     slot_of_tenant,
 )
-from repro.switchsim.tenancy import (  # noqa: F401
+from repro.switchsim.tenancy import (  # noqa: E402,F401
     jain_fairness,
     reset_shared_dataplanes,
     run_multitenant,

@@ -123,11 +123,13 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import fpisa
+# the shared mirror contract — defined once in the package root (see the
+# repro.switchsim module doc); re-exported here for legacy callers that
+# spell switchsim.dataplane.COUNTERS
+from repro.switchsim import COUNTERS, SLOT_STATE_FIELDS
 
 _PACKED_DTYPE = {"fp32": jnp.float32, "fp16": jnp.float16, "bf16": jnp.bfloat16}
 
-COUNTERS = ("packets", "duplicates", "stale", "overwrite", "overflow",
-            "reclaimed", "admission_denied", "preempted")
 _I_PACKETS, _I_DUP, _I_STALE, _I_OVERWRITE, _I_OVERFLOW, _I_RECLAIMED, \
     _I_DENIED, _I_PREEMPTED = range(len(COUNTERS))
 
@@ -246,6 +248,13 @@ class DataplaneState(NamedTuple):
     live: jax.Array  # (J, W) bool — per-job live worker (port) set
     slot_job: jax.Array  # (G,) int32 owning job; -1 = never claimed
     last_touch: jax.Array  # (G,) int32 round of the last owner-job touch
+
+
+# import-time mirror check: the jitted state layout IS the shared contract
+# (the numpy mirror's attributes are checked the same way in its __init__,
+# and tools/repro_lint's mirror-parity rule checks both statically)
+assert DataplaneState._fields == SLOT_STATE_FIELDS, (
+    DataplaneState._fields, SLOT_STATE_FIELDS)
 
 
 def init_state(cfg: DataplaneConfig) -> DataplaneState:
@@ -636,6 +645,12 @@ class NumpyDataplane:
         self._last_touch = np.zeros((g,), np.int64)
         self._counters = np.zeros((cfg.num_jobs, len(COUNTERS)), np.int64)
         self._recirc = [0] * cfg.num_pipelines
+        # runtime half of the mirror contract (static half: repro-lint's
+        # mirror-parity rule): one `_`-prefixed attribute per shared
+        # slot-state field, so the two dataplanes cannot drift silently
+        missing = [f for f in SLOT_STATE_FIELDS
+                   if not hasattr(self, f"_{f}")]
+        assert not missing, f"NumpyDataplane missing mirror fields {missing}"
 
     @property
     def stats(self) -> dict:

@@ -90,6 +90,9 @@ def pipeline_forward(params, batch, cfg, *, stage_axis: str, n_micro: int):
     )
     # broadcast last stage's outputs to all stages (psum over one-hot holder)
     mask = (sid == n - 1).astype(outputs.dtype)
+    # exactly one stage is nonzero, so the sum has a single term and no
+    # ordering sensitivity — not a gradient-path reduce
+    # repro-lint: disable=bit-identity
     outputs = lax.psum(outputs * mask, stage_axis)
 
     x = outputs.reshape(b, s, -1)

@@ -17,4 +17,11 @@ export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLA
 export PYTHONPATH="$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
 export TF_CPP_MIN_LOG_LEVEL=${TF_CPP_MIN_LOG_LEVEL:-4}  # silence XLA chatter
 
+# invariant linter first (stdlib-only, ~1s): a lint violation fails the
+# suite before pytest spends minutes compiling jits. SKIP_LINT=1 opts out
+# (e.g. when bisecting a runtime failure through known-unclean trees).
+if [[ "${SKIP_LINT:-0}" != "1" ]]; then
+  /usr/bin/env python3 -m tools.repro_lint src tests benchmarks examples
+fi
+
 /usr/bin/env python3 -m pytest -x -q "$@"

@@ -221,6 +221,7 @@ def test_legacy_module_functions_warn_and_delegate():
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
         got = jax.jit(compat.shard_map(
+            # repro-lint: disable=facade-only  this test exercises the shim
             lambda v: AR.allreduce(v, ("data",), cfg), mesh=mesh,
             in_specs=P(), out_specs=P(), check_vma=False))(x)
         assert any(issubclass(i.category, DeprecationWarning) for i in w), \

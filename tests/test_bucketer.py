@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core import allreduce as AR
 from repro.core import bucketer as B
+from repro.core.agg import Aggregator
 
 try:  # property tests are a bonus; the deterministic sweep always runs
     from hypothesis import given, settings, strategies as st
@@ -169,8 +170,9 @@ def _parity_w1(tree, strategy, backend, wire_bits, bucket_bytes, chunk=0):
         cfg = AR.AggConfig(strategy=strategy, backend=backend,
                            wire_bits=wire_bits, chunk_elems=chunk,
                            bucket_bytes=bb)
+        agg = Aggregator(cfg, ("data",))
         return jax.jit(compat.shard_map(
-            lambda t: AR.allreduce_tree(t, ("data",), cfg), mesh=mesh,
+            agg.allreduce_tree, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(), tree),),
             out_specs=jax.tree.map(lambda _: P(), tree), check_vma=False))
 

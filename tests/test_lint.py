@@ -1,0 +1,601 @@
+"""Fixture harness for tools/repro_lint — every rule has at least one
+positive (a seeded violation of the historical bug it encodes is flagged
+with the right file:line and rule id) and one negative (the idiomatic
+clean pattern passes), plus the whole-repo clean gate and the
+suppression-comment round trip.
+
+Fixture sources live in strings and are written into tmp trees that
+reproduce the repo layout the rule scopes expect (``src/repro/...``); the
+linter itself never imports the fixture code, so no jax is needed here.
+"""
+from __future__ import annotations
+
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from tools.repro_lint import (
+    available_rules,
+    format_findings,
+    get_rule,
+    main,
+    register_rule,
+    run_lint,
+    unregister_rule,
+)
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def write_tree(root: Path, files: dict) -> None:
+    for rel, src in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src), encoding="utf-8")
+
+
+def lint(root: Path, *paths, rules=None):
+    return run_lint(list(paths) or ["src"], root=root, rules=rules)
+
+
+def rules_hit(result):
+    return {f.rule for f in result.findings}
+
+
+def at(result, rule, rel, line):
+    """True iff ``rule`` fired at exactly rel:line."""
+    return any(f.rule == rule and f.path == rel and f.line == line
+               for f in result.findings)
+
+
+# ---------------------------------------------------------------------------
+# exact-scale — PR 3's tiny-normal flush-to-zero via inexact jnp.exp2
+# ---------------------------------------------------------------------------
+
+
+def test_exact_scale_positive(tmp_path):
+    write_tree(tmp_path, {"src/repro/core/scale.py": """\
+        import jax.numpy as jnp
+
+        def rescale(x, k):
+            return x * jnp.exp2(k)
+
+        def rescale2(x, e):
+            return x * 2.0 ** e
+    """})
+    res = lint(tmp_path, "src", rules=["exact-scale"])
+    assert at(res, "exact-scale", "src/repro/core/scale.py", 4)
+    assert at(res, "exact-scale", "src/repro/core/scale.py", 7)
+    assert len(res.findings) == 2
+
+
+def test_exact_scale_negative_and_scope(tmp_path):
+    write_tree(tmp_path, {
+        # the idiomatic exact helper: bit-assembled exponent field
+        "src/repro/core/scale.py": """\
+            import jax.numpy as jnp
+            from repro.core import numerics as nx
+
+            def _pow2(e):
+                return nx.bitcast_i32_to_f32((jnp.asarray(e, jnp.int32) + 127) << 23)
+
+            def rescale(x, k):
+                return (x * _pow2(k // 2)) * _pow2(k - k // 2)
+        """,
+        # exp2 outside core/kernels (benchmark data gen) is out of scope
+        "benchmarks/gen.py": """\
+            import numpy as np
+            x = np.exp2(np.arange(4))
+        """,
+    })
+    res = lint(tmp_path, "src", "benchmarks", rules=["exact-scale"])
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# bit-identity — PR 4's jnp.sum over the (W,) per-worker loss vector
+# ---------------------------------------------------------------------------
+
+
+def test_bit_identity_positive_worker_axis_sum(tmp_path):
+    write_tree(tmp_path, {"src/repro/train/step.py": """\
+        import jax.numpy as jnp
+
+        def finish(losses, w):
+            return jnp.sum(losses) / w
+    """})
+    res = lint(tmp_path, "src", rules=["bit-identity"])
+    assert at(res, "bit-identity", "src/repro/train/step.py", 4)
+
+
+def test_bit_identity_positive_raw_psum(tmp_path):
+    write_tree(tmp_path, {"src/repro/serve/agg.py": """\
+        from jax import lax
+
+        def reduce_stats(x, axes):
+            return lax.psum(x, axes)
+    """})
+    res = lint(tmp_path, "src", rules=["bit-identity"])
+    assert at(res, "bit-identity", "src/repro/serve/agg.py", 4)
+
+
+def test_bit_identity_negative(tmp_path):
+    write_tree(tmp_path, {
+        # fixed-order scan (the fix shipped in PR 4) is clean
+        "src/repro/train/step.py": """\
+            import jax
+            import jax.numpy as jnp
+
+            def finish(losses, w):
+                total, _ = jax.lax.scan(
+                    lambda c, v: (c + v, None), jnp.float32(0), losses)
+                return total / w
+        """,
+        # the implementation site may use raw collectives
+        "src/repro/core/allreduce.py": """\
+            from jax import lax
+
+            def native_allreduce(x, axes, cfg):
+                return lax.psum(x, tuple(axes))
+        """,
+    })
+    res = lint(tmp_path, "src", rules=["bit-identity"])
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# jax-in-callback — PR 2's CPU PJRT deadlock
+# ---------------------------------------------------------------------------
+
+
+def test_jax_in_callback_positive_transitive(tmp_path):
+    write_tree(tmp_path, {"src/repro/core/cb.py": """\
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        def helper(v):
+            return jnp.sum(v)
+
+        def run(x):
+            def host(vals):
+                return np.asarray(helper(vals))
+            return jax.pure_callback(host, x, x)
+    """})
+    res = lint(tmp_path, "src", rules=["jax-in-callback"])
+    # flagged at the jnp reference inside the transitively-reached helper
+    assert at(res, "jax-in-callback", "src/repro/core/cb.py", 6)
+
+
+def test_jax_in_callback_negative_numpy_only(tmp_path):
+    write_tree(tmp_path, {"src/repro/core/cb.py": """\
+        import jax
+        import numpy as np
+
+        def run(x):
+            def host(vals):
+                return np.asarray(vals).sum(axis=0)
+            return jax.pure_callback(host, x, x)
+    """})
+    res = lint(tmp_path, "src", rules=["jax-in-callback"])
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# donation-safety — the serve/scheduler.py donated-KV-pool pattern
+# ---------------------------------------------------------------------------
+
+
+def test_donation_safety_positive_read_after_donate(tmp_path):
+    write_tree(tmp_path, {"src/repro/serve/sched.py": """\
+        from functools import partial
+        import jax
+
+        @partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+        def step(fn, pool, toks):
+            return fn(pool, toks)
+
+        def drive(fn, pool, toks):
+            out = step(fn, pool, toks)
+            return pool.sum() + out
+    """})
+    res = lint(tmp_path, "src", rules=["donation-safety"])
+    assert at(res, "donation-safety", "src/repro/serve/sched.py", 10)
+
+
+def test_donation_safety_positive_loop_wraparound(tmp_path):
+    # the next iteration re-reads the donated buffer even though the read
+    # is textually ABOVE the call
+    write_tree(tmp_path, {"src/repro/serve/sched.py": """\
+        from functools import partial
+        import jax
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def step(pool):
+            return pool
+
+        def drive(pool, n):
+            for _ in range(n):
+                x = pool * 2
+                out = step(pool)
+            return out
+    """})
+    res = lint(tmp_path, "src", rules=["donation-safety"])
+    assert at(res, "donation-safety", "src/repro/serve/sched.py", 10)
+
+
+def test_donation_safety_negative_rebind(tmp_path):
+    write_tree(tmp_path, {"src/repro/serve/sched.py": """\
+        from functools import partial
+        import jax
+
+        @partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+        def step(fn, pool, toks):
+            return fn(pool, toks)
+
+        def drive(fn, pool, toks):
+            nxt, pool = step(fn, pool, toks)
+            return pool, nxt
+    """})
+    res = lint(tmp_path, "src", rules=["donation-safety"])
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# facade-only — PR 5's contract, statically
+# ---------------------------------------------------------------------------
+
+
+def test_facade_only_positive(tmp_path):
+    write_tree(tmp_path, {"examples/run.py": """\
+        from repro.core import allreduce as AR
+        from repro.core.allreduce import stacked_allreduce
+
+        def agg(x, cfg):
+            return AR.allreduce(x, ("data",), cfg)
+
+        def pick(name):
+            return STRATEGIES[name]
+    """})
+    res = lint(tmp_path, "examples", rules=["facade-only"])
+    assert at(res, "facade-only", "examples/run.py", 2)  # shim import
+    assert at(res, "facade-only", "examples/run.py", 5)  # shim call
+    assert at(res, "facade-only", "examples/run.py", 8)  # STRATEGIES[...]
+
+
+def test_facade_only_negative_facade_and_config(tmp_path):
+    write_tree(tmp_path, {"examples/run.py": """\
+        from repro.core.agg import AggConfig, Aggregator
+        from repro.core.allreduce import AggConfig as LegacyCfgImport
+
+        def agg(x):
+            a = Aggregator(AggConfig(strategy="fpisa"), ("data",))
+            return a.allreduce(x), a.allreduce_tree({"g": x})
+    """})
+    res = lint(tmp_path, "examples", rules=["facade-only"])
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# rng-discipline — the loadgen/benchmark reproducibility contract
+# ---------------------------------------------------------------------------
+
+
+def test_rng_discipline_positive(tmp_path):
+    write_tree(tmp_path, {"benchmarks/gen.py": """\
+        import numpy as np
+        from numpy.random import rand
+
+        np.random.seed(0)
+        x = np.random.normal(size=8)
+        y = rand(3)
+    """})
+    res = lint(tmp_path, "benchmarks", rules=["rng-discipline"])
+    assert at(res, "rng-discipline", "benchmarks/gen.py", 4)
+    assert at(res, "rng-discipline", "benchmarks/gen.py", 5)
+    assert at(res, "rng-discipline", "benchmarks/gen.py", 6)
+
+
+def test_rng_discipline_negative_generator(tmp_path):
+    write_tree(tmp_path, {"benchmarks/gen.py": """\
+        import numpy as np
+
+        rng = np.random.default_rng(np.random.SeedSequence([1, 2]))
+        x = rng.normal(size=8)
+    """})
+    res = lint(tmp_path, "benchmarks", rules=["rng-discipline"])
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# mirror-parity — the three-way dataplane / numpy-mirror contract
+# ---------------------------------------------------------------------------
+
+CLEAN_MIRROR = {
+    "src/repro/switchsim/__init__.py": """\
+        COUNTERS = ("packets", "duplicates")
+        SLOT_STATE_FIELDS = ("exp", "man")
+    """,
+    "src/repro/switchsim/dataplane.py": """\
+        from repro.switchsim import COUNTERS, SLOT_STATE_FIELDS
+
+        class DataplaneState:
+            exp: int
+            man: int
+
+        _I_PACKETS, _I_DUP = range(len(COUNTERS))
+
+        class NumpyDataplane:
+            def __init__(self, cfg):
+                self._exp = 0
+                self._man = 0
+    """,
+    "src/repro/switchsim/npfpisa.py": """\
+        EXP_BITS, MAN_BITS, BIAS = 8, 23, 127
+
+        def encode(x): pass
+        def renormalize(e, m): pass
+        def fpisa_a_add(ae, am, ie, im): pass
+        def fpisa_add_full(ae, am, ie, im): pass
+    """,
+    "src/repro/core/fpisa.py": """\
+        def encode(x, fmt=None): pass
+        def renormalize(p, fmt=None): pass
+        def fpisa_a_add(acc, inp, fmt=None): pass
+        def fpisa_add_full(acc, inp, fmt=None): pass
+    """,
+    "src/repro/core/numerics.py": """\
+        FP32 = FpFormat("fp32", exp_bits=8, man_bits=23)
+    """,
+    "src/repro/kernels/ref.py": """\
+        def fused_encode_align_ref(x): pass
+    """,
+    "src/repro/kernels/fpisa_fused.py": """\
+        def fused_encode_align(x): pass
+    """,
+}
+
+
+def test_mirror_parity_negative_clean_tree(tmp_path):
+    write_tree(tmp_path, CLEAN_MIRROR)
+    res = lint(tmp_path, "src", rules=["mirror-parity"])
+    assert res.findings == []
+
+
+def _mirror_with(tmp_path, rel, src):
+    files = dict(CLEAN_MIRROR)
+    files[rel] = src
+    write_tree(tmp_path, files)
+    return lint(tmp_path, "src", rules=["mirror-parity"])
+
+
+def test_mirror_parity_counter_drift(tmp_path):
+    # a counter added to the jitted dataplane only: the _I_* unpack grows
+    # but the shared COUNTERS (and so the numpy mirror's stats) does not
+    res = _mirror_with(tmp_path, "src/repro/switchsim/dataplane.py", """\
+        from repro.switchsim import COUNTERS, SLOT_STATE_FIELDS
+
+        class DataplaneState:
+            exp: int
+            man: int
+
+        _I_PACKETS, _I_DUP, _I_NEW = range(3)
+
+        class NumpyDataplane:
+            def __init__(self, cfg):
+                self._exp = 0
+                self._man = 0
+    """)
+    assert at(res, "mirror-parity", "src/repro/switchsim/dataplane.py", 7)
+
+
+def test_mirror_parity_duplicated_literal(tmp_path):
+    res = _mirror_with(tmp_path, "src/repro/switchsim/dataplane.py", """\
+        COUNTERS = ("packets", "duplicates")
+
+        class DataplaneState:
+            exp: int
+            man: int
+
+        _I_PACKETS, _I_DUP = range(len(COUNTERS))
+
+        class NumpyDataplane:
+            def __init__(self, cfg):
+                self._exp = 0
+                self._man = 0
+    """)
+    assert at(res, "mirror-parity", "src/repro/switchsim/dataplane.py", 1)
+
+
+def test_mirror_parity_state_field_drift(tmp_path):
+    res = _mirror_with(tmp_path, "src/repro/switchsim/dataplane.py", """\
+        from repro.switchsim import COUNTERS, SLOT_STATE_FIELDS
+
+        class DataplaneState:
+            exp: int
+            man: int
+            extra_plane: int
+
+        _I_PACKETS, _I_DUP = range(len(COUNTERS))
+
+        class NumpyDataplane:
+            def __init__(self, cfg):
+                self._exp = 0
+                self._man = 0
+    """)
+    assert at(res, "mirror-parity", "src/repro/switchsim/dataplane.py", 3)
+
+
+def test_mirror_parity_numpy_mirror_missing_field(tmp_path):
+    res = _mirror_with(tmp_path, "src/repro/switchsim/dataplane.py", """\
+        from repro.switchsim import COUNTERS, SLOT_STATE_FIELDS
+
+        class DataplaneState:
+            exp: int
+            man: int
+
+        _I_PACKETS, _I_DUP = range(len(COUNTERS))
+
+        class NumpyDataplane:
+            def __init__(self, cfg):
+                self._exp = 0
+    """)
+    # anchored at the numpy mirror's __init__ def line
+    assert at(res, "mirror-parity", "src/repro/switchsim/dataplane.py", 10)
+
+
+def test_mirror_parity_missing_mirror_function(tmp_path):
+    res = _mirror_with(tmp_path, "src/repro/switchsim/npfpisa.py", """\
+        EXP_BITS, MAN_BITS, BIAS = 8, 23, 127
+
+        def encode(x): pass
+        def renormalize(e, m): pass
+        def fpisa_add_full(ae, am, ie, im): pass
+    """)
+    assert any(f.rule == "mirror-parity" and "fpisa_a_add" in f.message
+               for f in res.findings)
+
+
+def test_mirror_parity_wire_constant_drift(tmp_path):
+    res = _mirror_with(tmp_path, "src/repro/switchsim/npfpisa.py", """\
+        EXP_BITS, MAN_BITS, BIAS = 8, 23, 126
+
+        def encode(x): pass
+        def renormalize(e, m): pass
+        def fpisa_a_add(ae, am, ie, im): pass
+        def fpisa_add_full(ae, am, ie, im): pass
+    """)
+    assert any(f.rule == "mirror-parity" and "BIAS" in f.message
+               for f in res.findings)
+
+
+def test_mirror_parity_kernel_oracle_drift(tmp_path):
+    res = _mirror_with(tmp_path, "src/repro/kernels/ref.py", """\
+        def fused_encode_align_ref(x): pass
+        def fused_decode_ref(m, b): pass
+    """)
+    assert any(f.rule == "mirror-parity" and "fused_decode" in f.message
+               for f in res.findings)
+
+
+# ---------------------------------------------------------------------------
+# suppressions round-trip
+# ---------------------------------------------------------------------------
+
+_VIOLATION = """\
+    import numpy as np
+    x = np.random.normal(size=4){comment}
+"""
+
+
+def test_suppression_round_trip(tmp_path):
+    rel = "benchmarks/gen.py"
+    # unsuppressed: flagged
+    write_tree(tmp_path, {rel: _VIOLATION.format(comment="")})
+    res = lint(tmp_path, "benchmarks", rules=["rng-discipline"])
+    assert rules_hit(res) == {"rng-discipline"} and not res.suppressed
+
+    # same-line suppression: moved to the suppressed list, run is clean
+    write_tree(tmp_path, {rel: _VIOLATION.format(
+        comment="  # repro-lint: disable=rng-discipline  fixture noise")})
+    res = lint(tmp_path, "benchmarks", rules=["rng-discipline"])
+    assert res.clean and [f.rule for f in res.suppressed] == ["rng-discipline"]
+
+    # comment-only line above the violation also suppresses it
+    write_tree(tmp_path, {rel: """\
+        import numpy as np
+        # repro-lint: disable=rng-discipline
+        x = np.random.normal(size=4)
+    """})
+    res = lint(tmp_path, "benchmarks", rules=["rng-discipline"])
+    assert res.clean and len(res.suppressed) == 1
+
+    # file-level disable
+    write_tree(tmp_path, {rel: """\
+        # repro-lint: disable-file=rng-discipline
+        import numpy as np
+        x = np.random.normal(size=4)
+        y = np.random.rand(2)
+    """})
+    res = lint(tmp_path, "benchmarks", rules=["rng-discipline"])
+    assert res.clean and len(res.suppressed) == 2
+
+    # a directive inside a string literal must NOT suppress anything
+    write_tree(tmp_path, {rel: """\
+        import numpy as np
+        s = "# repro-lint: disable-file=rng-discipline"
+        x = np.random.normal(size=4)
+    """})
+    res = lint(tmp_path, "benchmarks", rules=["rng-discipline"])
+    assert not res.clean
+
+
+# ---------------------------------------------------------------------------
+# registry + CLI + whole-repo gate
+# ---------------------------------------------------------------------------
+
+
+def test_registry_round_trip_and_duplicate_guard():
+    @register_rule("test-fixture-rule", description="fixture")
+    def _rule(mod, project):
+        return ()
+
+    try:
+        assert "test-fixture-rule" in available_rules()
+        with pytest.raises(ValueError, match="already registered"):
+            register_rule("test-fixture-rule")(lambda m, p: ())
+        register_rule("test-fixture-rule", overwrite=True)(lambda m, p: ())
+    finally:
+        unregister_rule("test-fixture-rule")
+    assert "test-fixture-rule" not in available_rules()
+
+
+def test_unknown_rule_nearest_match():
+    with pytest.raises(ValueError, match="did you mean 'facade-only'"):
+        get_rule("facade_only")
+
+
+def test_cli_json_output_and_exit_codes(tmp_path, capsys):
+    write_tree(tmp_path, {"src/repro/core/scale.py": """\
+        import jax.numpy as jnp
+        def f(x, k):
+            return x * jnp.exp2(k)
+    """})
+    code = main(["--root", str(tmp_path), "src", "--format", "json",
+                 "--output", str(tmp_path / "report.json")])
+    assert code == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["clean"] is False
+    assert payload["findings"][0]["rule"] == "exact-scale"
+    assert payload["findings"][0]["path"] == "src/repro/core/scale.py"
+    assert json.loads((tmp_path / "report.json").read_text()) == payload
+
+    # fixing the file flips the exit code to 0
+    write_tree(tmp_path, {"src/repro/core/scale.py": "x = 1\n"})
+    assert main(["--root", str(tmp_path), "src", "--format", "json"]) == 0
+    capsys.readouterr()
+
+    # unknown rule name is a usage error (2), with the nearest match
+    assert main(["--root", str(tmp_path), "src", "--rules", "exact_scale"]) == 2
+
+
+def test_whole_repo_lints_clean():
+    """The standing gate: the shipped tree has no unsuppressed findings
+    under ALL rules (mirrors the CI `lint` job and tests/run.sh)."""
+    res = run_lint(["src", "tests", "benchmarks", "examples"],
+                   root=REPO_ROOT)
+    assert res.errors == []
+    assert res.findings == [], format_findings(res)
+
+
+def test_human_format_lists_file_line_rule(tmp_path):
+    write_tree(tmp_path, {"src/repro/core/scale.py": """\
+        import jax.numpy as jnp
+        y = jnp.exp2(3)
+    """})
+    res = lint(tmp_path, "src", rules=["exact-scale"])
+    text = format_findings(res)
+    assert "src/repro/core/scale.py:2:4: exact-scale:" in text
+    assert "FAIL: 1 finding(s)" in text

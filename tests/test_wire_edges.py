@@ -17,6 +17,7 @@ from repro import compat
 from repro.core import allreduce as AR
 from repro.core import fpisa
 from repro.core import numerics as nx
+from repro.core.agg import Aggregator
 
 
 # ---------------------------------------------------------------------------
@@ -98,7 +99,7 @@ def test_wire_shift_matches_documented_bound():
 def _run_w1(x: np.ndarray, cfg: AR.AggConfig) -> np.ndarray:
     mesh = compat.make_mesh((1,), ("data",))
     fn = jax.jit(compat.shard_map(
-        lambda v: AR.allreduce(v, ("data",), cfg), mesh=mesh,
+        Aggregator(cfg, ("data",)).allreduce, mesh=mesh,
         in_specs=P(), out_specs=P(), check_vma=False))
     return np.asarray(fn(jnp.asarray(x)))
 

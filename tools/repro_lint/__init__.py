@@ -1,0 +1,46 @@
+"""repro-lint: AST-based invariant linter for the FPISA reproduction.
+
+Statically enforces the construction rules the repo's correctness
+arguments rest on — exact pow2 scaling, bit-identical worker-axis
+reduction order, jax-free host callbacks, three-way dataplane mirror
+parity, jit buffer-donation safety, facade-only aggregation, and threaded
+RNG state. See DESIGN.md §12 for the invariant catalog and
+tools/repro_lint/README.md for usage and suppressions.
+
+    python -m tools.repro_lint src tests benchmarks examples
+    python -m tools.repro_lint --list-rules
+    # per-line opt-out, with a reason:
+    #   ... # repro-lint: disable=facade-only  exercising the shim itself
+
+Stdlib-only by design: runs before (and without) the jax environment.
+"""
+from tools.repro_lint.engine import (  # noqa: F401
+    Finding,
+    LintResult,
+    ModuleInfo,
+    Project,
+    RuleSpec,
+    available_rules,
+    format_findings,
+    get_rule,
+    main,
+    register_rule,
+    run_lint,
+    unregister_rule,
+)
+from tools.repro_lint import mirror, rules  # noqa: F401  (self-registration)
+
+__all__ = [
+    "Finding",
+    "LintResult",
+    "ModuleInfo",
+    "Project",
+    "RuleSpec",
+    "available_rules",
+    "format_findings",
+    "get_rule",
+    "main",
+    "register_rule",
+    "run_lint",
+    "unregister_rule",
+]

@@ -1,0 +1,7 @@
+"""CLI entry point: ``python -m tools.repro_lint [paths...]``."""
+import sys
+
+from tools.repro_lint.engine import main
+
+if __name__ == "__main__":
+    sys.exit(main())

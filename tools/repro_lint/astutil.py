@@ -1,0 +1,102 @@
+"""Shared AST helpers for repro-lint rules (stdlib only)."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Tuple
+
+__all__ = [
+    "ImportMap",
+    "call_name",
+    "dotted",
+    "literal_str_tuple",
+    "top_level_defs",
+    "walk_scopes",
+]
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'jnp.exp2' for Attribute/Name chains; None for anything dynamic."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    return dotted(node.func)
+
+
+class ImportMap:
+    """Resolves local aliases back to fully-qualified import paths.
+
+    ``import jax.numpy as jnp``       -> alias "jnp"  => "jax.numpy"
+    ``from jax import lax``           -> alias "lax"  => "jax.lax"
+    ``from repro.core import allreduce as AR`` -> "AR" => "repro.core.allreduce"
+    """
+
+    def __init__(self, tree: ast.AST):
+        self.aliases: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+                    if a.asname:
+                        self.aliases[a.asname] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    self.aliases[a.asname or a.name] = (
+                        f"{node.module}.{a.name}")
+
+    def resolve(self, name: Optional[str]) -> Optional[str]:
+        """Qualify the leading segment of a dotted name via the alias map."""
+        if not name:
+            return None
+        head, _, rest = name.partition(".")
+        base = self.aliases.get(head, head)
+        return f"{base}.{rest}" if rest else base
+
+    def qualified(self, node: ast.AST) -> Optional[str]:
+        return self.resolve(dotted(node))
+
+
+def top_level_defs(tree: ast.Module) -> Dict[str, ast.AST]:
+    """name -> def node for module-level functions/classes/assignments."""
+    out: Dict[str, ast.AST] = {}
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            out[node.name] = node
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    out[tgt.id] = node
+    return out
+
+
+def literal_str_tuple(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """('a', 'b') / ['a', 'b'] literal -> tuple of strings, else None."""
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.append(elt.value)
+            else:
+                return None
+        return tuple(out)
+    return None
+
+
+def walk_scopes(tree: ast.Module) -> Iterator[ast.AST]:
+    """Yield the module plus every (possibly nested) function definition —
+    the linear-statement scopes the donation-safety rule analyses."""
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node

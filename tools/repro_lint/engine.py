@@ -1,0 +1,376 @@
+"""repro-lint engine: rule registry, suppressions, runner, output formats.
+
+The registry mirrors the ``register_strategy`` idiom of ``repro.core.agg``:
+rules self-register with capability metadata (scope predicate, file vs
+project granularity) instead of being hard-wired into the runner, so a new
+invariant plugs in with one decorator and is immediately reachable from the
+CLI, the test harness, and CI.
+
+Everything here is stdlib-only on purpose — the linter must run before (and
+regardless of) the jax environment, e.g. as the first CI step.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import difflib
+import fnmatch
+import json
+import re
+import sys
+import tokenize
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Finding",
+    "ModuleInfo",
+    "Project",
+    "RuleSpec",
+    "available_rules",
+    "format_findings",
+    "get_rule",
+    "register_rule",
+    "run_lint",
+    "unregister_rule",
+]
+
+
+# ---------------------------------------------------------------------------
+# findings
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a file:line."""
+
+    rule: str
+    path: str  # project-root-relative, posix separators
+    line: int
+    col: int
+    message: str
+
+    def key(self) -> Tuple[str, str, int]:
+        return (self.rule, self.path, self.line)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# parsed-module / project context
+# ---------------------------------------------------------------------------
+
+
+class ModuleInfo:
+    """One parsed source file: path, text, AST, per-line suppressions."""
+
+    def __init__(self, root: Path, path: Path):
+        self.abspath = path
+        self.rel = path.relative_to(root).as_posix()
+        self.source = path.read_text(encoding="utf-8")
+        self.tree = ast.parse(self.source, filename=str(path))
+        self.lines = self.source.splitlines()
+        self._line_disable, self._file_disable = _parse_suppressions(
+            self.source)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        rule = rule.lower()
+        for names in (self._file_disable,
+                      self._line_disable.get(line, ()),
+                      # a comment-only line suppresses the line below it
+                      self._line_disable.get(line - 1, ())
+                      if _comment_only(self.lines, line - 1) else ()):
+            if "all" in names or rule in names:
+                return True
+        return False
+
+
+def _comment_only(lines: Sequence[str], lineno: int) -> bool:
+    if not 1 <= lineno <= len(lines):
+        return False
+    return lines[lineno - 1].lstrip().startswith("#")
+
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable(?:-file)?)\s*=\s*([A-Za-z0-9_\-]+"
+    r"(?:\s*,\s*[A-Za-z0-9_\-]+)*)")
+
+
+def _parse_suppressions(source: str):
+    """Token-level scan (comments only, so suppression directives inside
+    string literals — e.g. lint-test fixtures — do not leak)."""
+    line_disable: Dict[int, Tuple[str, ...]] = {}
+    file_disable: List[str] = []
+    try:
+        tokens = tokenize.generate_tokens(iter(source.splitlines(True)).__next__)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _SUPPRESS_RE.search(tok.string)
+            if not m:
+                continue
+            names = tuple(n.strip().lower() for n in m.group(2).split(","))
+            if m.group(1) == "disable-file":
+                file_disable.extend(names)
+            else:
+                prev = line_disable.get(tok.start[0], ())
+                line_disable[tok.start[0]] = prev + names
+    except tokenize.TokenError:
+        pass
+    return line_disable, tuple(file_disable)
+
+
+class Project:
+    """Lint run context: the project root plus a parse cache, so project-
+    level rules (mirror parity) and file rules share one AST per file."""
+
+    def __init__(self, root: Path):
+        self.root = Path(root).resolve()
+        self._cache: Dict[Path, Optional[ModuleInfo]] = {}
+
+    def module(self, path: Path) -> Optional[ModuleInfo]:
+        """Parse (cached); returns None for unreadable/unparsable files —
+        syntax errors are reported by the runner, not by rules."""
+        path = path.resolve()
+        if path not in self._cache:
+            try:
+                self._cache[path] = ModuleInfo(self.root, path)
+            except (OSError, SyntaxError, ValueError):
+                self._cache[path] = None
+        return self._cache[path]
+
+    def module_rel(self, rel: str) -> Optional[ModuleInfo]:
+        p = self.root / rel
+        return self.module(p) if p.is_file() else None
+
+
+# ---------------------------------------------------------------------------
+# rule registry (the register_strategy idiom)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleSpec:
+    """One registered invariant rule.
+
+    ``check`` takes ``(module, project)`` for file rules and ``(project,)``
+    for project rules, yielding ``Finding``s. ``scope`` is a sequence of
+    glob patterns matched against the project-relative path (empty = every
+    linted file)."""
+
+    name: str
+    check: Callable
+    scope: Tuple[str, ...] = ()
+    project: bool = False  # True: run once per lint run, not per file
+    description: str = ""
+
+    def in_scope(self, rel: str) -> bool:
+        if not self.scope:
+            return True
+        return any(fnmatch.fnmatch(rel, pat) for pat in self.scope)
+
+
+_RULES: Dict[str, RuleSpec] = {}
+
+
+def register_rule(name: str, *, scope: Sequence[str] = (),
+                  project: bool = False, description: str = "",
+                  overwrite: bool = False):
+    """Decorator registering a rule under ``name`` (kebab-case id used in
+    reports and ``# repro-lint: disable=`` comments).
+
+        @register_rule("exact-scale", scope=("src/repro/core/*",),
+                       description="no inexact pow2 on scale paths")
+        def check(module, project): ...
+
+    Re-registering requires ``overwrite=True`` (two plugins colliding should
+    fail loudly, same contract as the aggregation strategy registry)."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in _RULES and not overwrite:
+            raise ValueError(
+                f"lint rule {name!r} is already registered "
+                f"(pass overwrite=True to replace it)")
+        _RULES[name] = RuleSpec(
+            name=name, check=fn, scope=tuple(scope), project=project,
+            description=description or (fn.__doc__ or "").split("\n")[0])
+        return fn
+
+    return deco
+
+
+def unregister_rule(name: str) -> None:
+    _RULES.pop(name, None)
+
+
+def _ensure_builtin() -> None:
+    if "facade-only" not in _RULES:
+        from tools.repro_lint import mirror, rules  # noqa: F401
+
+
+def available_rules() -> Tuple[str, ...]:
+    _ensure_builtin()
+    return tuple(sorted(_RULES))
+
+
+def get_rule(name: str) -> RuleSpec:
+    _ensure_builtin()
+    try:
+        return _RULES[name]
+    except KeyError:
+        close = difflib.get_close_matches(name, sorted(_RULES), n=1)
+        hint = f"; did you mean {close[0]!r}?" if close else ""
+        raise ValueError(
+            f"unknown lint rule {name!r}; registered rules: "
+            f"{', '.join(sorted(_RULES))}{hint}") from None
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+
+def _iter_py_files(paths: Sequence[Path]) -> Iterable[Path]:
+    seen = set()
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            files: Iterable[Path] = (p,)
+        elif p.is_dir():
+            files = sorted(p.rglob("*.py"))
+        else:
+            files = ()
+        for f in files:
+            if "__pycache__" in f.parts:
+                continue
+            f = f.resolve()
+            if f not in seen:
+                seen.add(f)
+                yield f
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]
+    suppressed: List[Finding]
+    errors: List[str]  # unparsable files
+    checked: int
+    rules: Tuple[str, ...]
+
+    @property
+    def clean(self) -> bool:
+        return not self.findings and not self.errors
+
+    def to_dict(self) -> dict:
+        return {
+            "version": 1,
+            "clean": self.clean,
+            "checked_files": self.checked,
+            "rules": list(self.rules),
+            "findings": [f.to_dict() for f in self.findings],
+            "suppressed": [f.to_dict() for f in self.suppressed],
+            "errors": list(self.errors),
+        }
+
+
+def run_lint(paths: Sequence[str | Path], *, root: str | Path | None = None,
+             rules: Sequence[str] | None = None) -> LintResult:
+    """Lint ``paths`` (files or directories, relative to ``root``/cwd).
+
+    File rules run per parsed module in their scope; project rules run once
+    against the project root (they locate their anchor files themselves and
+    stay silent when the anchors do not exist — a fixture tree exercises
+    them by reproducing the layout). Findings carry root-relative paths;
+    suppression comments in the *target* file filter them."""
+    _ensure_builtin()
+    root_path = Path(root).resolve() if root else Path.cwd()
+    project = Project(root_path)
+    names = tuple(rules) if rules else available_rules()
+    specs = [get_rule(n) for n in names]
+
+    raw: List[Finding] = []
+    errors: List[str] = []
+    checked = 0
+    for path in _iter_py_files([root_path / p for p in map(str, paths)]):
+        try:
+            rel = path.relative_to(root_path).as_posix()
+        except ValueError:
+            rel = path.as_posix()
+        mod = project.module(path)
+        if mod is None:
+            errors.append(f"{rel}: unreadable or not valid Python")
+            continue
+        checked += 1
+        for spec in specs:
+            if spec.project or not spec.in_scope(rel):
+                continue
+            raw.extend(spec.check(mod, project))
+    for spec in specs:
+        if spec.project:
+            raw.extend(spec.check(project))
+
+    findings, suppressed = [], []
+    for f in sorted(set(raw), key=lambda f: (f.path, f.line, f.rule)):
+        mod = project.module_rel(f.path)
+        if mod is not None and mod.suppressed(f.rule, f.line):
+            suppressed.append(f)
+        else:
+            findings.append(f)
+    return LintResult(findings=findings, suppressed=suppressed,
+                      errors=errors, checked=checked, rules=names)
+
+
+def format_findings(result: LintResult, fmt: str = "human") -> str:
+    if fmt == "json":
+        return json.dumps(result.to_dict(), indent=2, sort_keys=True)
+    out = []
+    for f in result.findings:
+        out.append(f"{f.path}:{f.line}:{f.col}: {f.rule}: {f.message}")
+    out.extend(f"error: {e}" for e in result.errors)
+    tail = (f"{len(result.findings)} finding(s), "
+            f"{len(result.suppressed)} suppressed, "
+            f"{result.checked} file(s) checked")
+    out.append(("clean: " if result.clean else "FAIL: ") + tail)
+    return "\n".join(out)
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    import argparse
+
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description="AST-based invariant linter for the FPISA repro "
+                    "(bit-identity, mirror parity, donation safety, ...)")
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files/directories to lint (default: src)")
+    parser.add_argument("--format", choices=("human", "json"),
+                        default="human")
+    parser.add_argument("--rules", default=None, metavar="R1,R2",
+                        help="comma-separated subset of rules to run")
+    parser.add_argument("--root", default=None,
+                        help="project root (default: cwd); findings and "
+                             "scopes are relative to it")
+    parser.add_argument("--list-rules", action="store_true")
+    parser.add_argument("--output", default=None, metavar="FILE",
+                        help="also write the report (in --format) to FILE")
+    ns = parser.parse_args(argv)
+
+    if ns.list_rules:
+        for name in available_rules():
+            spec = get_rule(name)
+            kind = "project" if spec.project else "file"
+            print(f"{name:18s} [{kind}] {spec.description}")
+        return 0
+
+    rules = [r.strip() for r in ns.rules.split(",")] if ns.rules else None
+    try:
+        result = run_lint(ns.paths, root=ns.root, rules=rules)
+    except ValueError as e:  # unknown rule name
+        print(f"repro-lint: {e}", file=sys.stderr)
+        return 2
+    report = format_findings(result, ns.format)
+    print(report)
+    if ns.output:
+        Path(ns.output).write_text(report + "\n", encoding="utf-8")
+    return 0 if result.clean else 1

@@ -1,0 +1,284 @@
+"""MIRROR-PARITY — structural diff of the three dataplanes and the FPISA
+numpy mirrors (project-level rule; runs once per lint).
+
+The repo maintains the same switch semantics in three places on purpose
+(DESIGN.md §10, kernels/README.md): the jitted ``switchsim/dataplane.py``,
+its jax-free ``NumpyDataplane`` twin (host callbacks must not re-enter
+jax), and the ``core/switch.py`` per-packet shim — plus pure-numpy FPISA
+primitive mirrors in ``switchsim/npfpisa.py`` twinned with
+``core/fpisa.py``, and the ``kernels/ref.py`` oracles twinned with the
+Pallas kernels. Any drift between them historically showed up as parity
+test failures hours later; this rule catches the structural half of the
+drift at lint time:
+
+* ``COUNTERS`` / ``SLOT_STATE_FIELDS`` are defined ONCE, in
+  ``switchsim/__init__.py``, and only imported elsewhere;
+* ``DataplaneState``'s fields == ``SLOT_STATE_FIELDS``; the ``_I_*`` counter
+  index aliases cover every counter; ``NumpyDataplane`` carries a ``_f``
+  attribute for every slot-state field ``f``;
+* ``npfpisa.py`` defines the same mirror functions as ``core/fpisa.py`` and
+  its hard-coded fp32 wire constants match ``core/numerics.py``'s FP32;
+* every ``fused_*_ref`` oracle in ``kernels/ref.py`` has a same-named
+  kernel in ``kernels/fpisa_fused.py``;
+* the takeover-lottery (admission-rule) constants are defined in exactly
+  one module.
+
+Anchor files are located from the project root; a missing anchor file
+skips its checks silently so the rule can be exercised on fixture trees.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from tools.repro_lint.astutil import literal_str_tuple
+from tools.repro_lint.engine import Finding, Project, register_rule
+
+INIT = "src/repro/switchsim/__init__.py"
+DATAPLANE = "src/repro/switchsim/dataplane.py"
+SWITCH_SHIM = "src/repro/core/switch.py"
+NPFPISA = "src/repro/switchsim/npfpisa.py"
+CORE_FPISA = "src/repro/core/fpisa.py"
+NUMERICS = "src/repro/core/numerics.py"
+KERNEL_REF = "src/repro/kernels/ref.py"
+KERNEL_FUSED = "src/repro/kernels/fpisa_fused.py"
+
+# the FPISA primitive mirror contract: these exist, same name, in BOTH
+# core/fpisa.py (jnp) and switchsim/npfpisa.py (numpy)
+MIRROR_FUNCS = ("encode", "renormalize", "fpisa_a_add", "fpisa_add_full")
+# npfpisa's hard-coded fp32 wire constants, checked against numerics.FP32
+WIRE_CONSTS = ("EXP_BITS", "MAN_BITS", "BIAS")
+SHARED_CONSTS = ("COUNTERS", "SLOT_STATE_FIELDS")
+LOTTERY_PREFIX = "_LOTTERY"
+
+
+def _top_assigns(tree: ast.Module) -> Dict[str, ast.Assign]:
+    """Top-level ``NAME = ...`` (incl. tuple-unpacking) -> Assign node."""
+    out: Dict[str, ast.Assign] = {}
+    for node in tree.body:
+        if not isinstance(node, ast.Assign):
+            continue
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name):
+                out[tgt.id] = node
+            elif isinstance(tgt, ast.Tuple):
+                for elt in tgt.elts:
+                    if isinstance(elt, ast.Name):
+                        out[elt.id] = node
+    return out
+
+
+def _top_defs(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body
+            if isinstance(n, ast.FunctionDef)}
+
+
+def _int_bindings(tree: ast.Module) -> Dict[str, int]:
+    """Top-level integer constant bindings, following tuple unpacking
+    (``A, B, C = 8, 23, 127``) and simple int literals."""
+    out: Dict[str, int] = {}
+    for node in tree.body:
+        if not isinstance(node, ast.Assign):
+            continue
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name) and isinstance(node.value, ast.Constant) \
+                    and isinstance(node.value.value, int):
+                out[tgt.id] = node.value.value
+            elif isinstance(tgt, ast.Tuple) and isinstance(node.value, ast.Tuple) \
+                    and len(tgt.elts) == len(node.value.elts):
+                for name_n, val_n in zip(tgt.elts, node.value.elts):
+                    if isinstance(name_n, ast.Name) \
+                            and isinstance(val_n, ast.Constant) \
+                            and isinstance(val_n.value, int):
+                        out[name_n.id] = val_n.value
+    return out
+
+
+def _class(tree: ast.Module, name: str) -> Optional[ast.ClassDef]:
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+def _namedtuple_fields(cls: ast.ClassDef) -> Tuple[str, ...]:
+    return tuple(stmt.target.id for stmt in cls.body
+                 if isinstance(stmt, ast.AnnAssign)
+                 and isinstance(stmt.target, ast.Name))
+
+
+def _self_attr_stores(fn: ast.FunctionDef) -> Tuple[str, ...]:
+    out: List[str] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and isinstance(node.ctx, ast.Store) \
+                and isinstance(node.value, ast.Name) and node.value.id == "self":
+            out.append(node.attr)
+    return tuple(out)
+
+
+@register_rule(
+    "mirror-parity",
+    project=True,
+    description="the three dataplanes + numpy FPISA mirrors + kernel "
+                "oracles stay structurally in sync (shared COUNTERS/"
+                "slot-state constants, mirror functions, wire constants)")
+def mirror_parity(project: Project) -> Iterator[Finding]:
+    init = project.module_rel(INIT)
+    dp = project.module_rel(DATAPLANE)
+
+    # ---- shared constants live in switchsim/__init__.py ------------------
+    counters: Optional[Tuple[str, ...]] = None
+    slot_fields: Optional[Tuple[str, ...]] = None
+    if init is not None:
+        assigns = _top_assigns(init.tree)
+        for const in SHARED_CONSTS:
+            node = assigns.get(const)
+            val = literal_str_tuple(node.value) if node is not None else None
+            if val is None:
+                yield Finding(
+                    "mirror-parity", init.rel, 1, 0,
+                    f"switchsim/__init__.py must define {const} as a "
+                    f"literal tuple of strings — it is the single source "
+                    f"of truth all three dataplanes import")
+            elif const == "COUNTERS":
+                counters = val
+            else:
+                slot_fields = val
+
+    # ---- no duplicated literals in the mirror modules --------------------
+    for rel in (DATAPLANE, SWITCH_SHIM, NPFPISA):
+        mod = project.module_rel(rel)
+        if mod is None:
+            continue
+        assigns = _top_assigns(mod.tree)
+        for const in SHARED_CONSTS:
+            node = assigns.get(const)
+            if node is not None and literal_str_tuple(node.value) is not None:
+                yield Finding(
+                    "mirror-parity", mod.rel, node.lineno, node.col_offset,
+                    f"{const} re-defined as a literal here; import it from "
+                    f"repro.switchsim so the three dataplanes cannot drift")
+
+    # ---- dataplane structural checks -------------------------------------
+    if dp is not None and slot_fields is not None:
+        state = _class(dp.tree, "DataplaneState")
+        if state is not None:
+            fields = _namedtuple_fields(state)
+            if fields != slot_fields:
+                missing = [f for f in slot_fields if f not in fields]
+                extra = [f for f in fields if f not in slot_fields]
+                yield Finding(
+                    "mirror-parity", dp.rel, state.lineno, state.col_offset,
+                    f"DataplaneState fields drifted from SLOT_STATE_FIELDS "
+                    f"(missing: {missing or '-'}, extra: {extra or '-'}, "
+                    f"or order differs); update switchsim/__init__.py and "
+                    f"BOTH mirror dataplanes together")
+        npdp = _class(dp.tree, "NumpyDataplane")
+        if npdp is not None:
+            init_fn = next((n for n in npdp.body
+                            if isinstance(n, ast.FunctionDef)
+                            and n.name == "__init__"), None)
+            if init_fn is not None:
+                attrs = set(_self_attr_stores(init_fn))
+                for f in slot_fields:
+                    if f"_{f}" not in attrs:
+                        yield Finding(
+                            "mirror-parity", dp.rel, init_fn.lineno,
+                            init_fn.col_offset,
+                            f"NumpyDataplane.__init__ does not initialize "
+                            f"self._{f} — slot-state field {f!r} exists in "
+                            f"the jitted dataplane but not the numpy "
+                            f"mirror")
+    if dp is not None and counters is not None:
+        # the _I_* index alias unpacking must cover every counter
+        for node in dp.tree.body:
+            if not isinstance(node, ast.Assign):
+                continue
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Tuple) and tgt.elts and all(
+                    isinstance(e, ast.Name) and e.id.startswith("_I_")
+                    for e in tgt.elts):
+                if len(tgt.elts) != len(counters):
+                    yield Finding(
+                        "mirror-parity", dp.rel, node.lineno,
+                        node.col_offset,
+                        f"{len(tgt.elts)} _I_* counter index aliases vs "
+                        f"{len(counters)} COUNTERS entries — a counter was "
+                        f"added on one side only")
+
+    # ---- lottery/admission constants defined exactly once ----------------
+    lottery_homes = []
+    for rel in (INIT, DATAPLANE, SWITCH_SHIM, NPFPISA):
+        mod = project.module_rel(rel)
+        if mod is None:
+            continue
+        names = [n for n in _top_assigns(mod.tree) if n.startswith(LOTTERY_PREFIX)]
+        if names:
+            lottery_homes.append((mod, names))
+    if len(lottery_homes) > 1:
+        for mod, names in lottery_homes[1:]:
+            node = _top_assigns(mod.tree)[names[0]]
+            yield Finding(
+                "mirror-parity", mod.rel, node.lineno, node.col_offset,
+                f"takeover-lottery constants {names} re-defined here as "
+                f"well as in {lottery_homes[0][0].rel}; the admission "
+                f"rules must share one constant set")
+
+    # ---- FPISA primitive mirrors (core/fpisa.py <-> npfpisa.py) ----------
+    npf = project.module_rel(NPFPISA)
+    fp = project.module_rel(CORE_FPISA)
+    if npf is not None and fp is not None:
+        np_defs, fp_defs = _top_defs(npf.tree), _top_defs(fp.tree)
+        for fn in MIRROR_FUNCS:
+            for mod, defs, twin in ((npf, np_defs, fp.rel),
+                                    (fp, fp_defs, npf.rel)):
+                if fn not in defs:
+                    yield Finding(
+                        "mirror-parity", mod.rel, 1, 0,
+                        f"mirror function {fn}() missing here but required "
+                        f"by the numpy<->jnp FPISA mirror contract "
+                        f"(twin: {twin})")
+    nx = project.module_rel(NUMERICS)
+    if npf is not None and nx is not None:
+        want = _fp32_consts(nx.tree)
+        have = _int_bindings(npf.tree)
+        for name in WIRE_CONSTS:
+            if name in want and name in have and want[name] != have[name]:
+                yield Finding(
+                    "mirror-parity", npf.rel, 1, 0,
+                    f"npfpisa.{name} = {have[name]} but core/numerics.py "
+                    f"FP32 implies {name} = {want[name]} — the numpy "
+                    f"mirror no longer matches the wire format")
+
+    # ---- kernel oracle twins (ref.py <-> fpisa_fused.py) ------------------
+    ref = project.module_rel(KERNEL_REF)
+    fused = project.module_rel(KERNEL_FUSED)
+    if ref is not None and fused is not None:
+        fused_defs = _top_defs(fused.tree)
+        for name, node in _top_defs(ref.tree).items():
+            if name.startswith("fused_") and name.endswith("_ref") \
+                    and name[: -len("_ref")] not in fused_defs:
+                yield Finding(
+                    "mirror-parity", ref.rel, node.lineno, node.col_offset,
+                    f"oracle {name}() has no same-named kernel "
+                    f"{name[:-4]}() in kernels/fpisa_fused.py — oracle and "
+                    f"kernel export sets drifted")
+
+
+def _fp32_consts(tree: ast.Module) -> Dict[str, int]:
+    """exp_bits/man_bits from ``FP32 = FpFormat(..., exp_bits=8,
+    man_bits=23)``; bias derived the same way FpFormat.bias does."""
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Name) and tgt.id == "FP32":
+                kw = {k.arg: k.value.value for k in node.value.keywords
+                      if isinstance(k.value, ast.Constant)
+                      and isinstance(k.value.value, int)}
+                if "exp_bits" in kw and "man_bits" in kw:
+                    return {
+                        "EXP_BITS": kw["exp_bits"],
+                        "MAN_BITS": kw["man_bits"],
+                        "BIAS": (1 << (kw["exp_bits"] - 1)) - 1,
+                    }
+    return {}

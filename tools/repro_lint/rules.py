@@ -1,0 +1,454 @@
+"""Per-file invariant rules (project-level mirror parity lives in
+``tools/repro_lint/mirror.py``; the catalog with each rule's historical bug
+and approximation/false-negative space is DESIGN.md §12).
+
+Every rule is a conservative AST approximation of an invariant the repo
+argues in prose — the point is to catch the *recurrence* of bug classes
+already paid for once, not to prove the invariant."""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from tools.repro_lint.astutil import ImportMap, dotted
+from tools.repro_lint.engine import Finding, ModuleInfo, Project, register_rule
+
+# ---------------------------------------------------------------------------
+# EXACT-SCALE — no inexact pow2 on decode/scale paths (PR 3's tiny-normal
+# flush-to-zero: a single jnp.exp2(k) factor overflows f32 and is off by
+# ulps for |k| >~ 64; scale paths must use bit-assembled exact pow2).
+# ---------------------------------------------------------------------------
+
+_INEXACT_POW2 = {
+    "jax.numpy.exp2", "numpy.exp2", "math.exp2",
+    "jax.numpy.float_power", "numpy.float_power",
+}
+_POW_FNS = {"jax.numpy.power", "numpy.power", "math.pow"}
+
+
+def _is_two(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Constant)
+            and isinstance(node.value, (int, float))
+            and node.value == 2)
+
+
+@register_rule(
+    "exact-scale",
+    scope=("src/repro/core/*", "src/repro/kernels/*"),
+    description="no jnp.exp2 / float 2**e on core/kernels scale paths — "
+                "use the bit-assembled exact pow2 helpers")
+def exact_scale(mod: ModuleInfo, project: Project) -> Iterator[Finding]:
+    imports = ImportMap(mod.tree)
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            q = imports.qualified(node.func)
+            bad = q in _INEXACT_POW2 or (
+                q in _POW_FNS and node.args and _is_two(node.args[0]))
+            if bad:
+                yield Finding(
+                    "exact-scale", mod.rel, node.lineno, node.col_offset,
+                    f"{q.split('.')[-1]}() is not an exact power-of-two "
+                    f"scale (inexact past |e| ~ 64, overflows f32 past "
+                    f"2**127); use the bit-assembled helper "
+                    f"(core/allreduce._pow2 / numerics bitcast)")
+        elif isinstance(node, ast.BinOp) and isinstance(node.op, ast.Pow) \
+                and _is_two(node.left):
+            yield Finding(
+                "exact-scale", mod.rel, node.lineno, node.col_offset,
+                "float 2 ** e on a scale path; use the bit-assembled "
+                "exact pow2 helper (core/allreduce._pow2)")
+
+
+# ---------------------------------------------------------------------------
+# BIT-IDENTITY — no value-order-dependent reduce over the stacked
+# logical-worker axis, and no raw flat collectives outside the facade
+# (PR 4's bug: a jnp.sum over the (W,) per-worker loss vector was
+# pattern-matched into a mesh-shaped cross-device all-reduce, so the scalar
+# stopped being bit-reproducible across re-meshes; the fix is a fixed-order
+# lax.scan — and every gradient-sized reduce goes through the Aggregator).
+# ---------------------------------------------------------------------------
+
+# implementation sites where raw collectives ARE the point
+_BITID_IMPL = {
+    "src/repro/core/allreduce.py",
+    "src/repro/core/agg.py",
+    "src/repro/core/bucketer.py",
+    "src/repro/compat.py",
+}
+_WORKER_NAME = re.compile(r"worker|stacked|losses", re.IGNORECASE)
+_ORDER_SENSITIVE = {"jax.numpy.sum", "jax.numpy.mean",
+                    "jax.lax.psum", "jax.lax.pmean"}
+_RAW_COLLECTIVES = {"jax.lax.psum", "jax.lax.psum_scatter"}
+
+
+@register_rule(
+    "bit-identity",
+    scope=("src/repro/*",),
+    description="no jnp.sum/mean/psum over the stacked logical-worker axis; "
+                "flat reduces go through the Aggregator facade")
+def bit_identity(mod: ModuleInfo, project: Project) -> Iterator[Finding]:
+    if mod.rel in _BITID_IMPL:
+        return
+    imports = ImportMap(mod.tree)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        q = imports.qualified(node.func)
+        # raw collectives first: psum is in BOTH sets, and outside the
+        # implementation it is a violation regardless of the arg's name
+        if q in _RAW_COLLECTIVES:
+            yield Finding(
+                "bit-identity", mod.rel, node.lineno, node.col_offset,
+                f"raw {q.split('.')[-1]}() outside the aggregation "
+                f"implementation; flat reduces must go through "
+                f"Aggregator.allreduce[_tree] so strategy/wire semantics "
+                f"stay in one place")
+        elif q in _ORDER_SENSITIVE:
+            for arg in node.args:
+                name = dotted(arg)
+                if name and _WORKER_NAME.search(name):
+                    yield Finding(
+                        "bit-identity", mod.rel, node.lineno,
+                        node.col_offset,
+                        f"{q.split('.')[-1]}({name}) reduces over a "
+                        f"logical-worker-stacked value; on a mesh this "
+                        f"becomes a cross-device reduce whose grouping "
+                        f"follows the mesh size and breaks bit-identical "
+                        f"recovery — use a fixed-order lax.scan or the "
+                        f"Aggregator facade")
+                    break
+
+
+# ---------------------------------------------------------------------------
+# NO-JAX-IN-CALLBACK — functions handed to jax.pure_callback/io_callback,
+# transitively (same module), must never re-enter jax (PR 2's deadlock: all
+# CPU PJRT executor threads park inside concurrent host callbacks, so a
+# nested jitted dispatch can never be scheduled).
+# ---------------------------------------------------------------------------
+
+_CALLBACK_FNS = {
+    "jax.pure_callback", "jax.experimental.pure_callback",
+    "jax.experimental.io_callback", "jax.debug.callback",
+}
+
+
+def _function_defs(tree: ast.Module) -> Dict[str, ast.AST]:
+    """Every (possibly nested) def/lambda-binding in the module, by name."""
+    defs: Dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, node)
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Lambda):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    defs.setdefault(tgt.id, node.value)
+    return defs
+
+
+def _callback_target(arg: ast.AST, imports: ImportMap,
+                     defs: Dict[str, ast.AST]) -> Optional[ast.AST]:
+    if isinstance(arg, ast.Lambda):
+        return arg
+    if isinstance(arg, ast.Call):  # functools.partial(f, ...)
+        q = imports.qualified(arg.func)
+        if q in ("functools.partial", "partial") and arg.args:
+            return _callback_target(arg.args[0], imports, defs)
+        return None
+    if isinstance(arg, ast.Name):
+        return defs.get(arg.id)
+    return None
+
+
+def _jax_refs(fn: ast.AST, imports: ImportMap, defs: Dict[str, ast.AST],
+              seen: Set[int]) -> Iterator[ast.AST]:
+    """Yield nodes inside ``fn`` (transitive same-module closure) that
+    resolve to anything under the ``jax`` package."""
+    if id(fn) in seen:
+        return
+    seen.add(id(fn))
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                q = imports.resolve(node.id)
+                if q == "jax" or (q or "").startswith("jax."):
+                    yield node
+                elif node.id in defs and id(defs[node.id]) not in seen:
+                    yield from _jax_refs(defs[node.id], imports, defs, seen)
+
+
+@register_rule(
+    "jax-in-callback",
+    description="host-callback functions (pure_callback/io_callback) must "
+                "be jax-free, transitively — re-entering jax deadlocks the "
+                "CPU client")
+def jax_in_callback(mod: ModuleInfo, project: Project) -> Iterator[Finding]:
+    imports = ImportMap(mod.tree)
+    defs = _function_defs(mod.tree)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if imports.qualified(node.func) not in _CALLBACK_FNS or not node.args:
+            continue
+        target = _callback_target(node.args[0], imports, defs)
+        if target is None:
+            continue  # dynamic callable: out of this rule's reach
+        for ref in _jax_refs(target, imports, defs, set()):
+            yield Finding(
+                "jax-in-callback", mod.rel, ref.lineno, ref.col_offset,
+                f"jax reference {ref.id!r} inside a function passed to a "  # type: ignore[attr-defined]
+                f"host callback (line {node.lineno}); host callbacks must "
+                f"stay numpy-only (switchsim/npfpisa mirrors) or the CPU "
+                f"PJRT client deadlocks")
+
+
+# ---------------------------------------------------------------------------
+# DONATION-SAFETY — an argument donated to a jit must not be read after the
+# call in the same scope (the serve/scheduler.py KV-pool pattern: donated
+# pools are updated in place by XLA; the old buffer is garbage afterwards).
+# ---------------------------------------------------------------------------
+
+
+def _int_tuple(node: ast.AST) -> Tuple[int, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                out.append(elt.value)
+        return tuple(out)
+    return ()
+
+
+def _donating_defs(tree: ast.Module, imports: ImportMap) -> Dict[str, Tuple[int, ...]]:
+    """name -> donated argnums, for @partial(jax.jit, donate_argnums=...)
+    decorated defs and ``name = jax.jit(f, donate_argnums=...)`` bindings."""
+    out: Dict[str, Tuple[int, ...]] = {}
+
+    def donate_of(call: ast.Call) -> Tuple[int, ...]:
+        if imports.qualified(call.func) not in ("jax.jit", "jit"):
+            # @partial(jax.jit, ...) wraps the jit call one level out
+            if imports.qualified(call.func) in ("functools.partial", "partial") \
+                    and call.args \
+                    and imports.qualified(call.args[0]) in ("jax.jit", "jit"):
+                pass
+            else:
+                return ()
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                return _int_tuple(kw.value)
+        return ()
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call):
+                    nums = donate_of(dec)
+                    if nums:
+                        out[node.name] = nums
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            nums = donate_of(node.value)
+            if nums:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        out[tgt.id] = nums
+    return out
+
+
+def _scope_statements(scope: ast.AST) -> List[ast.stmt]:
+    """All statements of a function/module scope in source order, not
+    descending into nested function/class scopes."""
+    out: List[ast.stmt] = []
+
+    def visit(body: List[ast.stmt]):
+        for stmt in body:
+            out.append(stmt)
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            for field in ("body", "orelse", "finalbody"):
+                visit(getattr(stmt, field, []) or [])
+            for handler in getattr(stmt, "handlers", []) or []:
+                visit(handler.body)
+
+    visit(scope.body)
+    return out
+
+
+def _assigned_names(stmt: ast.stmt) -> Set[str]:
+    names: Set[str] = set()
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, (ast.Store, ast.Del)):
+            names.add(node.id)
+    return names
+
+
+def _enclosing_loop_body(stmts: List[ast.stmt], call_stmt: ast.stmt,
+                         scope: ast.AST) -> Optional[List[ast.stmt]]:
+    for node in ast.walk(scope):
+        if isinstance(node, (ast.For, ast.While, ast.AsyncFor)):
+            body = _scope_statements_of_loop(node)
+            if call_stmt in body:
+                return body
+    return None
+
+
+def _scope_statements_of_loop(loop: ast.AST) -> List[ast.stmt]:
+    out: List[ast.stmt] = []
+
+    def visit(body):
+        for stmt in body:
+            out.append(stmt)
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            for field in ("body", "orelse", "finalbody"):
+                visit(getattr(stmt, field, []) or [])
+            for handler in getattr(stmt, "handlers", []) or []:
+                visit(handler.body)
+
+    visit(loop.body)
+    return out
+
+
+@register_rule(
+    "donation-safety",
+    description="a buffer passed at a donate_argnums position must not be "
+                "read after the call — XLA reuses its memory in place")
+def donation_safety(mod: ModuleInfo, project: Project) -> Iterator[Finding]:
+    imports = ImportMap(mod.tree)
+    donating = _donating_defs(mod.tree, imports)
+    if not donating:
+        return
+    from tools.repro_lint.astutil import walk_scopes
+
+    for scope in walk_scopes(mod.tree):
+        stmts = _scope_statements(scope)
+        for idx, stmt in enumerate(stmts):
+            for node in ast.walk(stmt):
+                if not (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Name)
+                        and node.func.id in donating):
+                    continue
+                nums = donating[node.func.id]
+                rebound = _assigned_names(stmt)
+                tracked = {}
+                for pos in nums:
+                    if pos < len(node.args) and isinstance(node.args[pos], ast.Name):
+                        nm = node.args[pos].id
+                        if nm not in rebound:
+                            tracked[nm] = node.lineno
+                if not tracked:
+                    continue
+                # linear scan of following statements; inside a loop the
+                # body wraps around (next iteration re-executes the top)
+                following = stmts[idx + 1:]
+                loop_body = _enclosing_loop_body(stmts, stmt, scope)
+                if loop_body is not None:
+                    pos_in_loop = loop_body.index(stmt)
+                    following = (loop_body[pos_in_loop + 1:]
+                                 + loop_body[:pos_in_loop]
+                                 + [s for s in stmts[idx + 1:]
+                                    if s not in loop_body])
+                live = dict(tracked)
+                for later in following:
+                    if not live:
+                        break
+                    for n2 in ast.walk(later):
+                        if isinstance(n2, ast.Name) and n2.id in live:
+                            if isinstance(n2.ctx, (ast.Store, ast.Del)):
+                                live.pop(n2.id, None)
+                            else:
+                                yield Finding(
+                                    "donation-safety", mod.rel, n2.lineno,
+                                    n2.col_offset,
+                                    f"{n2.id!r} was donated to "
+                                    f"{node.func.id}() on line "
+                                    f"{live.pop(n2.id)} and read again "
+                                    f"here — the donated buffer is dead "
+                                    f"after the call (rebind it to the "
+                                    f"call's result instead)")
+                        if not live:
+                            break
+
+
+# ---------------------------------------------------------------------------
+# FACADE-ONLY — no calls through the deprecated module-level allreduce shims
+# or indexed strategy tables; every consumer constructs one Aggregator
+# (PR 5's contract, today enforced only via DeprecationWarning at runtime).
+# ---------------------------------------------------------------------------
+
+_SHIM_MODULE = "repro.core.allreduce"
+_SHIM_NAMES = {"allreduce", "allreduce_tree",
+               "stacked_allreduce", "stacked_allreduce_tree"}
+_FACADE_IMPL = {"src/repro/core/allreduce.py", "src/repro/core/agg.py"}
+_STRATEGY_TABLES = {"STRATEGIES", "STACKED_STRATEGIES"}
+
+
+@register_rule(
+    "facade-only",
+    description="no deprecated allreduce/stacked_allreduce shims or indexed "
+                "STRATEGIES tables; construct an Aggregator (core/agg.py)")
+def facade_only(mod: ModuleInfo, project: Project) -> Iterator[Finding]:
+    if mod.rel in _FACADE_IMPL:
+        return
+    imports = ImportMap(mod.tree)
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ImportFrom) and node.module == _SHIM_MODULE:
+            for a in node.names:
+                if a.name in _SHIM_NAMES:
+                    yield Finding(
+                        "facade-only", mod.rel, node.lineno, node.col_offset,
+                        f"importing deprecated shim "
+                        f"{_SHIM_MODULE}.{a.name}; construct an "
+                        f"Aggregator(AggConfig, axes) instead "
+                        f"(repro.core.agg)")
+        elif isinstance(node, ast.Call):
+            q = imports.qualified(node.func)
+            if q and q.startswith(_SHIM_MODULE + ".") \
+                    and q.rsplit(".", 1)[1] in _SHIM_NAMES:
+                yield Finding(
+                    "facade-only", mod.rel, node.lineno, node.col_offset,
+                    f"call through deprecated shim {q}(); use "
+                    f"Aggregator.allreduce[_tree] (repro.core.agg)")
+        elif isinstance(node, ast.Subscript):
+            name = dotted(node.value)
+            if name and name.split(".")[-1] in _STRATEGY_TABLES:
+                yield Finding(
+                    "facade-only", mod.rel, node.lineno, node.col_offset,
+                    f"indexing removed strategy table {name}[...]; use "
+                    f"repro.core.agg.get_strategy(name) / the registry")
+
+
+# ---------------------------------------------------------------------------
+# RNG-DISCIPLINE — no global-state numpy RNG; a seeded Generator (or jax
+# PRNGKey) must be threaded explicitly so every run is reproducible across
+# processes (the BENCH_*.json reproducibility contract).
+# ---------------------------------------------------------------------------
+
+_RNG_OK = {"default_rng", "Generator", "SeedSequence", "BitGenerator",
+           "PCG64", "PCG64DXSM", "Philox", "MT19937", "SFC64"}
+
+
+@register_rule(
+    "rng-discipline",
+    description="no np.random global-state calls; thread an explicitly "
+                "seeded np.random.Generator / jax PRNGKey")
+def rng_discipline(mod: ModuleInfo, project: Project) -> Iterator[Finding]:
+    imports = ImportMap(mod.tree)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        q = imports.qualified(node.func)
+        if not q or not q.startswith("numpy.random."):
+            continue
+        fn = q.split(".")[-1]
+        if fn in _RNG_OK:
+            continue
+        yield Finding(
+            "rng-discipline", mod.rel, node.lineno, node.col_offset,
+            f"np.random.{fn}() draws from numpy's hidden global RNG state; "
+            f"create np.random.default_rng(seed) and pass the Generator "
+            f"down so runs are reproducible across processes")
