@@ -1,13 +1,18 @@
 """Shared benchmark helpers. Every benchmark prints `name,us_per_call,derived`
-CSV rows via `emit`, and persists machine-readable results via `write_json`
-(the perf-trajectory files the roadmap tracks)."""
+CSV rows via `emit`, persists machine-readable results via `write_json`
+(the perf-trajectory files the roadmap tracks), and times through `timed`/
+`timeit` — the one place the perf_counter + block_until_ready discipline
+lives (lint rule: timing-discipline), emitting tracer spans when tracing
+is on."""
 import json
 import os
 import platform
-import time
+from time import perf_counter
 
 import jax
 import numpy as np
+
+from repro import trace
 
 
 def smoke() -> bool:
@@ -22,14 +27,28 @@ def scaled(full, tiny):
     return tiny if smoke() else full
 
 
-def timeit(fn, *args, warmup=2, iters=5):
+def timed(name, fn, *args, warmup=2, iters=5, **tags):
+    """Time ``fn(*args)`` (mean seconds over ``iters`` after ``warmup``,
+    each call blocked to readiness) and return ``(dt, out)``.
+
+    The shared timing loop for every benchmark — no module hand-rolls its
+    own perf_counter pairs (lint: timing-discipline). When the global tracer
+    is enabled, each measured call also lands as a synced ``name`` span with
+    ``tags``, so a traced benchmark run doubles as autotuner input."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    t0 = perf_counter()
     for _ in range(iters):
-        out = jax.block_until_ready(fn(*args))
-    dt = (time.perf_counter() - t0) / iters
+        with trace.span(name, **tags) as sp:
+            out = jax.block_until_ready(fn(*args))
+            sp.sync(out)
+    dt = (perf_counter() - t0) / iters
     return dt, out
+
+
+def timeit(fn, *args, warmup=2, iters=5):
+    """Anonymous-span variant of :func:`timed` (legacy call sites)."""
+    return timed("bench.timeit", fn, *args, warmup=warmup, iters=iters)
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):

@@ -12,13 +12,11 @@
    ``run_aggregation`` output for identical seeds. Results (both rates + the
    parity bit) land in ``BENCH_fig10.json``.
 """
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, scaled, timeit, write_json
+from benchmarks.common import emit, scaled, timed, timeit, write_json
 from repro.core import fpisa as F
 from repro.core import numerics as nx
 
@@ -57,9 +55,9 @@ def bench_dataplane():
     # emulator almost exactly (~550 pps on this host, measured against the
     # seed implementation), so this baseline is the genuine per-packet cost.
     legacy = sw.FpisaSwitch(sw.SwitchConfig(**par_cfg))
-    t0 = time.perf_counter()
-    ss.run_aggregation(legacy, vec_par, drop_prob=DP_DROP, seed=2)
-    legacy_pps = _packets(legacy.stats) / (time.perf_counter() - t0)
+    dt_legacy, _ = timed("fig10.dataplane_legacy", ss.run_aggregation, legacy,
+                         vec_par, DP_DROP, 2, warmup=0, iters=1)
+    legacy_pps = _packets(legacy.stats) / dt_legacy
 
     # --- batched multi-pipeline rate at ~100x the legacy packet volume
     cfg = ss.DataplaneConfig(num_workers=DP_WORKERS, num_slots=128,
@@ -69,9 +67,9 @@ def bench_dataplane():
     # warm: full identical run primes every (batch size, rounds) jit variant
     ss.run_aggregation(ss.BatchedDataplane(cfg), vec, drop_prob=DP_DROP, seed=2)
     dp = ss.BatchedDataplane(cfg)
-    t0 = time.perf_counter()
-    ss.run_aggregation(dp, vec, drop_prob=DP_DROP, seed=2)
-    batched_pps = _packets(dp.stats) / (time.perf_counter() - t0)
+    dt_batched, _ = timed("fig10.dataplane_batched", ss.run_aggregation, dp,
+                          vec, DP_DROP, 2, warmup=0, iters=1)
+    batched_pps = _packets(dp.stats) / dt_batched
 
     speedup = batched_pps / legacy_pps
     emit("fig10.dataplane_legacy_pps", 0, f"pps={legacy_pps:.0f}")

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from benchmarks.common import emit, scaled, timeit, write_json
+from benchmarks.common import emit, scaled, timed, write_json
 from repro import compat
 from repro.core.agg import AggConfig, Aggregator
 
@@ -69,8 +69,10 @@ def bench_bucketing():
         for k in tree)
 
     iters = scaled(10, 3)
-    dt_leaf, _ = timeit(per_leaf_fn, tree, warmup=2, iters=iters)
-    dt_buck, _ = timeit(bucketed_fn, tree, warmup=2, iters=iters)
+    dt_leaf, _ = timed("fig11.per_leaf_step", per_leaf_fn, tree,
+                       warmup=2, iters=iters, bucket_bytes=0)
+    dt_buck, _ = timed("fig11.bucketed_step", bucketed_fn, tree,
+                       warmup=2, iters=iters, bucket_bytes=BUCKET_BYTES)
     speedup = dt_leaf / dt_buck
     emit("fig11.bucketed_agg_step", dt_buck * 1e6,
          f"per_leaf_us={dt_leaf*1e6:.0f};speedup={speedup:.2f}x;"
@@ -93,7 +95,7 @@ def run():
     x = jnp.asarray(rng.standard_normal(n).astype(np.float32) * 0.01)
     scale = jnp.float32(2.0 ** 20)
     sw = jax.jit(lambda v: (jnp.round(v * scale).astype(jnp.int32).astype(jnp.float32) / scale))
-    dt_sw, _ = timeit(sw, x)
+    dt_sw, _ = timed("fig11.switch_quantize", sw, x)
     sw_elems_per_core = n / dt_sw
 
     link = {}

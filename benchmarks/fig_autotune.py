@@ -1,0 +1,134 @@
+"""Autotuner proof benchmark — ``--bucket-bytes auto`` vs the default plan.
+
+End-to-end run of the DESIGN.md §13 pipeline on the fig11 gradient tree:
+
+1. **Profile**: replay the fpisa split-phase pipeline at probe sizes under
+   synced tracer spans (``repro.autotune.profile.profile_phases``) and export
+   the trace JSONL — the same artifact ``--trace-out`` produces.
+2. **Fit**: per-phase affine cost model from that trace
+   (``repro.autotune.costmodel.fit_from_jsonl``).
+3. **Search**: sweep candidate ``bucket_bytes`` plans over the eval tree's
+   leaves (``repro.autotune.search.choose_bucket_bytes``) — the exact
+   resolution path ``AggConfig.from_args`` runs for ``--bucket-bytes auto``.
+4. **Prove**: measure the tuned plan against the default — the blind
+   fallback plan ``--bucket-bytes auto`` resolves to when NO trace exists
+   (``search.DEFAULT_AUTO_BUCKET_BYTES``) — on the fig11 tree. Acceptance:
+   tuned is bit-identical and no slower at smoke size, faster at full size.
+   (Per-leaf ``bucket_bytes=0`` is also swept as a candidate, so the tuner
+   can and does fall back to it when the model says bucketing loses.)
+
+Results land in ``BENCH_autotune.json`` (schema checked by
+tests/test_benchmarks.py).
+"""
+import os
+import tempfile
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import emit, scaled, timed, write_json
+from benchmarks.fig11_e2e_speedup import _gradient_tree
+from repro import compat, trace
+from repro.autotune import (
+    DEFAULT_AUTO_BUCKET_BYTES, choose_bucket_bytes, fit_from_jsonl,
+    probe_sizes, profile_phases,
+)
+from repro.core.agg import AggConfig, Aggregator
+
+# the untuned baseline: what `--bucket-bytes auto` resolves to with no trace
+DEFAULT_BUCKET_BYTES = DEFAULT_AUTO_BUCKET_BYTES
+
+
+def _trace_path() -> str:
+    base = os.environ.get("BENCH_DIR") or tempfile.gettempdir()
+    return os.path.join(base, "TRACE_autotune.jsonl")
+
+
+def run():
+    cfg = AggConfig(strategy="fpisa", backend="jnp")
+
+    # 1. profile under a live global tracer, export the trace JSONL
+    trace.enable()
+    sizes = probe_sizes(block=cfg.block,
+                        max_elems=scaled(1 << 20, 1 << 14))
+    spans = profile_phases(cfg, sizes=sizes, iters=scaled(3, 2), warmup=1)
+    path = _trace_path()
+    trace.write_jsonl(trace.get(), path)
+    trace.disable()
+    emit("autotune.profile", 0,
+         f"probes={len(sizes)};spans={len(spans)};trace={path}")
+
+    # 2-3. fit + search over the eval tree's leaves
+    rng = np.random.default_rng(0)
+    n_layers = scaled(64, 6)
+    tree = _gradient_tree(rng, n_layers)
+    leaves = list(tree.values())
+    model = fit_from_jsonl(path)
+    tuned, scores = choose_bucket_bytes(model, leaves, block=cfg.block)
+    emit("autotune.search", scores[tuned] * 1e6,
+         f"tuned_bucket_bytes={tuned};candidates={len(scores)}")
+
+    # 4. measure tuned vs default on the fig11 harness
+    mesh = compat.make_mesh((jax.device_count(),), ("data",))
+
+    def make(bucket_bytes: int):
+        agg = Aggregator(AggConfig(strategy="fpisa", backend="jnp",
+                                   bucket_bytes=bucket_bytes), ("data",))
+        return jax.jit(compat.shard_map(
+            agg.allreduce_tree, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P(), tree),),
+            out_specs=jax.tree.map(lambda _: P(), tree), check_vma=False))
+
+    default_fn = make(DEFAULT_BUCKET_BYTES)
+    # identical plan -> identical program: reuse the executable so the
+    # comparison measures the plan, not compile-to-compile variance
+    tuned_fn = default_fn if tuned == DEFAULT_BUCKET_BYTES else make(tuned)
+    a, b = default_fn(tree), tuned_fn(tree)
+    bit_identical = all(
+        bool(jnp.all(a[k].view(jnp.int32) == b[k].view(jnp.int32)))
+        for k in tree)
+
+    iters = scaled(10, 3)
+    dt_default, _ = timed("fig_autotune.default_step", default_fn, tree,
+                          warmup=2, iters=iters,
+                          bucket_bytes=DEFAULT_BUCKET_BYTES)
+    dt_tuned, _ = timed("fig_autotune.tuned_step", tuned_fn, tree,
+                        warmup=2, iters=iters, bucket_bytes=tuned)
+    speedup = dt_default / dt_tuned
+    no_worse = bool(dt_tuned <= dt_default * 1.05)  # 5% measurement slack
+    emit("fig_autotune.tuned_agg_step", dt_tuned * 1e6,
+         f"default_us={dt_default*1e6:.0f};speedup={speedup:.2f}x;"
+         f"bit_identical={int(bit_identical)};no_worse={int(no_worse)}")
+
+    write_json("autotune", {
+        "workload": {
+            "n_layers": n_layers,
+            "n_leaves": len(leaves),
+            "n_elems": int(sum(v.size for v in leaves)),
+        },
+        "profile": {
+            "probe_sizes": list(sizes),
+            "n_spans": len(spans),
+            "trace_path": path,
+        },
+        "model": model.to_dict(),
+        "search": {
+            "tuned_bucket_bytes": int(tuned),
+            "default_bucket_bytes": DEFAULT_BUCKET_BYTES,
+            "predicted_us": {str(k): v * 1e6 for k, v in scores.items()},
+        },
+        "comparison": {
+            "default_us": dt_default * 1e6,
+            "tuned_us": dt_tuned * 1e6,
+            "speedup": speedup,
+            "no_worse": no_worse,
+            "bit_identical": bit_identical,
+        },
+    })
+
+
+if __name__ == "__main__":
+    run()

@@ -11,7 +11,7 @@ asserted."""
 import json
 import os
 
-from benchmarks.common import emit, scaled, timeit, write_json
+from benchmarks.common import emit, scaled, timed, write_json
 
 RESULTS = [
     ("single", "results/dryrun_single.jsonl"),
@@ -121,7 +121,7 @@ def kernel_bench(r=None, b=256, preshift=1):
     out = {}
     baseline = None
     for name, fn in [("jnp", run_jnp), ("two_pass", run_two_pass), ("fused", run_fused)]:
-        dt, res = timeit(fn, x, warmup=2, iters=5)
+        dt, res = timed(f"roofline.{name}", fn, x, warmup=2, iters=5)
         if baseline is None:
             baseline = res
         else:  # all three variants must agree bit-for-bit

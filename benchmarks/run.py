@@ -4,8 +4,8 @@ Prints ``name,us_per_call,derived`` CSV rows (see each module's docstring for
 what it reproduces and the paper's claim it is checked against).
 """
 import sys
-import time
 import traceback
+from time import perf_counter
 
 MODULES = [
     "tab1_alu_cost",
@@ -20,6 +20,7 @@ MODULES = [
     "fig_serve",
     "tab3_resource_util",
     "roofline",
+    "fig_autotune",
 ]
 
 
@@ -29,14 +30,14 @@ def main() -> None:
     for name in MODULES:
         if only and name not in only:
             continue
-        t0 = time.time()
+        t0 = perf_counter()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             mod.run()
-            print(f"{name}.wall,{(time.time()-t0)*1e6:.0f},ok")
+            print(f"{name}.wall,{(perf_counter()-t0)*1e6:.0f},ok")
         except Exception as e:  # noqa: BLE001 — report, keep going
             traceback.print_exc()
-            print(f"{name}.wall,{(time.time()-t0)*1e6:.0f},ERROR:{type(e).__name__}")
+            print(f"{name}.wall,{(perf_counter()-t0)*1e6:.0f},ERROR:{type(e).__name__}")
 
 
 if __name__ == "__main__":

@@ -25,12 +25,16 @@ from repro.core import fpisa as F
 from repro.core import numerics as nx
 from repro.core.agg import add_agg_args, resolve_backend
 from repro.kernels import fpisa_fused
+from repro.trace import add_trace_args
+from repro.trace import from_args as trace_from_args
 
 ap = argparse.ArgumentParser()
 add_agg_args(ap)  # the same shared --agg-* flags every entry point uses
+add_trace_args(ap)  # the shared --trace-* flags (repro.trace)
 ap.set_defaults(bucket_bytes=1 << 16)  # step 4's whole-pytree demo
 args = ap.parse_args()
 backend = resolve_backend(args.agg_backend)
+session = trace_from_args(args)  # spans from step 4's Aggregator calls
 
 rng = np.random.default_rng(0)
 W, N, BLOCK = 8, 1 << 16, 256
@@ -129,3 +133,4 @@ same = all(bool(jnp.all(per_leaf[k].view(jnp.int32) == bucketed[k].view(jnp.int3
            for k in tree)
 print(f"\nbucketed tree aggregation ({args.bucket_bytes} B buckets) "
       f"bit-identical to per-leaf: {same}")
+session.finish()

@@ -10,7 +10,7 @@ Run:  PYTHONPATH=src python examples/serve_lm.py [--agg-strategy fpisa]
       PYTHONPATH=src python examples/serve_lm.py --smoke --engine continuous
 """
 import argparse
-import time
+from time import perf_counter
 
 import jax
 
@@ -20,11 +20,14 @@ from repro.models.registry import build, param_count
 from repro.serve.engine import ServeEngine
 from repro.serve.loadgen import PoissonLoadGen, latency_report
 from repro.serve.scheduler import ContinuousEngine
+from repro.trace import add_trace_args
+from repro.trace import from_args as trace_from_args
 
 
 def main():
     ap = argparse.ArgumentParser()
     add_agg_args(ap)  # the shared --agg-* flags (repro.core.agg)
+    add_trace_args(ap)  # the shared --trace-* flags (repro.trace)
     ap.add_argument("--engine", choices=("static", "continuous"),
                     default="static", help="serving engine to demo")
     ap.add_argument("--smoke", action="store_true",
@@ -61,7 +64,8 @@ def main():
                         seed=args.seed)
     trace = lg.trace(n_req)
 
-    t0 = time.time()
+    session = trace_from_args(args)
+    t0 = perf_counter()
     if args.engine == "continuous":
         eng = ContinuousEngine(model, params, num_slots=slots,
                                max_len=max_len, page_size=page, agg=agg)
@@ -72,7 +76,8 @@ def main():
         eng = ServeEngine(model, params, batch_size=slots, max_len=max_len,
                           agg=agg)
         results = eng.run([r for _, r in trace])
-    dt = time.time() - t0
+    dt = perf_counter() - t0
+    session.finish()
 
     total_new = sum(len(r.tokens) for r in results)
     print(f"{n_req} requests, {total_new} tokens in {dt:.2f}s "

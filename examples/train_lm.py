@@ -11,6 +11,8 @@ import argparse
 from repro.configs import get_config
 from repro.core.agg import AggConfig, add_agg_args
 from repro.launch.train import train_loop
+from repro.trace import add_trace_args
+from repro.trace import from_args as trace_from_args
 
 
 def main():
@@ -20,6 +22,7 @@ def main():
                     help="tiny smoke-size config instead of the ~100M model "
                          "(CI examples-smoke job)")
     add_agg_args(ap)  # the shared --agg-* flags (repro.core.agg)
+    add_trace_args(ap)  # the shared --trace-* flags (repro.trace)
     ap.add_argument("--ckpt-dir", default=None,
                     help="default /tmp/fpisa_train_lm (normal path) or "
                          "/tmp/fpisa_train_lm_fault (--fault-plan path: the "
@@ -52,6 +55,14 @@ def main():
         agg = AggConfig.from_args(args)
     except ValueError as e:
         ap.error(str(e))
+    session = trace_from_args(args)
+    try:
+        _run(ap, args, cfg, agg)
+    finally:
+        session.finish()
+
+
+def _run(ap, args, cfg, agg):
     if args.fault_plan or args.num_hosts:
         if agg.chunk_elems:
             ap.error("--agg-chunk is not supported on the elastic controller "

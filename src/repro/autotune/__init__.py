@@ -1,0 +1,17 @@
+"""Cost-model autotuning of the aggregation schedule (DESIGN.md §13).
+
+Pipeline: record phase spans (``repro.trace`` / ``profile.profile_phases``)
+-> fit the per-phase affine cost model (``costmodel.fit``) -> sweep
+candidate bucket plans (``search.choose_bucket_bytes``) -> surface as
+``--bucket-bytes auto`` (resolved in ``AggConfig.from_args`` via
+``search.auto_bucket_bytes``). Proof benchmark: ``benchmarks/fig_autotune``.
+"""
+from repro.autotune.costmodel import (  # noqa: F401
+    PHASES, CostModel, PhaseCost, fit, fit_from_jsonl,
+)
+from repro.autotune.profile import probe_sizes, profile_phases  # noqa: F401
+from repro.autotune.search import (  # noqa: F401
+    DEFAULT_AUTO_BUCKET_BYTES, TRACE_ENV, auto_bucket_bytes,
+    candidate_bucket_bytes, choose_bucket_bytes, plan_sizes,
+    predict_tree_time, reference_leaves,
+)

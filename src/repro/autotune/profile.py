@@ -1,0 +1,109 @@
+"""Phase replay profiler: measure encode/collective/finish at probe sizes.
+
+The cost model (``costmodel.py``) fits per-phase time as a function of
+bucket size; this module produces those measurements by replaying the
+strategy's split-phase pipeline — the SAME registry hooks the bucketer
+dispatches through (``StrategySpec.flat_phases``) — as three separately
+jitted ``shard_map`` programs, each timed under a synced tracer span::
+
+    autotune.probe {phase: encode,     elems: n, synced: True}
+    autotune.probe {phase: collective, elems: n, synced: True}
+    autotune.probe {phase: finish,     elems: n, synced: True}
+
+Because each phase is dispatched and blocked on individually, the spans
+measure real steady-state device time per phase (warmup iterations eat the
+compile), not trace-time — the attribution rule the tracer's sync boundary
+exists for. The split does lose cross-phase fusion XLA might apply inside
+one jit; that bias is part of the "when replay lies" contract in
+DESIGN.md §13.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro import trace as _trace
+from repro.core.agg import AggConfig, get_strategy, resolve_backend
+
+
+def probe_sizes(*, block: int = 256, n_probes: int = 6,
+                max_elems: int = 1 << 20) -> tuple[int, ...]:
+    """Geometric block-multiple probe grid from one block up to
+    ``max_elems`` — wide enough that the fit separates fixed from
+    per-element cost."""
+    sizes, n = [], block
+    while n <= max_elems and len(sizes) < n_probes:
+        sizes.append(n)
+        n *= 4
+    return tuple(sizes)
+
+
+def profile_phases(cfg: AggConfig | None = None, *,
+                   sizes: Sequence[int] | None = None,
+                   axes: Sequence[str] = ("data",),
+                   iters: int = 3, warmup: int = 1, seed: int = 0,
+                   tracer: "_trace.Tracer | None" = None) -> list[dict]:
+    """Replay the flat split-phase pipeline at each probe size; returns the
+    recorded span dicts (also left on the tracer used).
+
+    Spans land on ``tracer`` when given, else the enabled global tracer,
+    else a private one — so both ``--trace-out`` runs and standalone calls
+    (fig_autotune) work without handle threading."""
+    cfg = cfg or AggConfig(strategy="fpisa", backend="jnp")
+    spec = get_strategy(cfg.strategy)
+    if spec.flat_phases is None:
+        raise ValueError(
+            f"strategy {cfg.strategy!r} has no split-phase pipeline hooks; "
+            f"the phase profiler can only replay split-phase strategies "
+            f"(e.g. fpisa)")
+    backend = resolve_backend(cfg.backend)
+    sizes = tuple(sizes) if sizes is not None else probe_sizes(block=cfg.block)
+    for n in sizes:
+        if n % cfg.block:
+            raise ValueError(
+                f"probe sizes must be block multiples (block={cfg.block}), "
+                f"got {n}")
+
+    tr = tracer
+    if tr is None:
+        tr = _trace.get() if _trace.enabled() else _trace.Tracer()
+
+    mesh = compat.make_mesh((jax.device_count(),), tuple(axes))
+
+    def staged(which: int):
+        # the phase factory resolves axis sizes, so it must be invoked
+        # INSIDE the shard_map context (trace time — free at run time).
+        # P() prefix-specs: every input/output leaf fully replicated, which
+        # is how the fig11/quickstart harnesses drive the bucketer too
+        def fn(arg):
+            phases = spec.flat_phases(tuple(axes), cfg, backend)
+            return phases[which](arg)
+
+        return jax.jit(compat.shard_map(
+            fn, mesh=mesh, in_specs=(P(),), out_specs=P(), check_vma=False))
+
+    enc_fn, col_fn, fin_fn = staged(0), staged(1), staged(2)
+
+    rng = np.random.default_rng(seed)
+    start = len(tr.spans)
+    for n in sizes:
+        x = jnp.asarray(rng.standard_normal(n).astype(np.float32) * 0.01)
+        for _ in range(warmup):
+            jax.block_until_ready(fin_fn(col_fn(enc_fn(x))))
+        for _ in range(iters):
+            with tr.span("autotune.probe", phase="encode", elems=n,
+                         strategy=cfg.strategy, backend=backend) as sp:
+                state = sp.sync(enc_fn(x))
+            with tr.span("autotune.probe", phase="collective", elems=n,
+                         strategy=cfg.strategy, backend=backend) as sp:
+                collected = sp.sync(col_fn(state))
+            with tr.span("autotune.probe", phase="finish", elems=n,
+                         strategy=cfg.strategy, backend=backend) as sp:
+                sp.sync(fin_fn(collected))
+    return tr.spans[start:]

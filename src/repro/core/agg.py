@@ -57,6 +57,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import trace as _trace
+
 DEFAULT_BLOCK = 256
 
 BACKENDS = ("auto", "jnp", "pallas")
@@ -153,7 +155,22 @@ class AggConfig:
         through :func:`add_agg_args` — the single CLI threading point.
 
         Validates strategy and backend immediately (named options + nearest
-        match) so a typo'd flag fails at the command line, not mid-trace."""
+        match) so a typo'd flag fails at the command line, not mid-trace.
+
+        ``--bucket-bytes auto`` resolves HERE, once, to a concrete byte
+        count via the cost-model autotuner (``repro.autotune``): the trace
+        named by ``--autotune-trace`` (or $REPRO_AUTOTUNE_TRACE) is fitted
+        and the candidate sweep picks the plan; with no trace available it
+        falls back loudly to the measured-good default. The config itself
+        always carries an int, so everything downstream (hashing, jit
+        caching, the bucketer) is unchanged."""
+        bucket_bytes = getattr(ns, "bucket_bytes", 0)
+        if isinstance(bucket_bytes, str):
+            from repro.autotune import search as _search
+
+            bucket_bytes = _search.auto_bucket_bytes(
+                trace_path=getattr(ns, "autotune_trace", None),
+                block=getattr(ns, "agg_block", None) or DEFAULT_BLOCK)
         cfg = cls(
             strategy=getattr(ns, "agg_strategy", "fpisa"),
             backend=getattr(ns, "agg_backend", "auto"),
@@ -161,12 +178,25 @@ class AggConfig:
             pod_wire_bits=getattr(ns, "agg_pod_wire_bits", None),
             fmt_name=getattr(ns, "agg_fmt", None) or "fp32",
             chunk_elems=getattr(ns, "agg_chunk", 0),
-            bucket_bytes=getattr(ns, "bucket_bytes", 0),
+            bucket_bytes=bucket_bytes,
             block=getattr(ns, "agg_block", None) or DEFAULT_BLOCK,
         )
         get_strategy(cfg.strategy)   # raises with options + nearest match
         resolve_backend(cfg.backend)
         return cfg
+
+
+def _bucket_bytes_flag(value: str):
+    """argparse type for ``--bucket-bytes``: an int, or the literal "auto"
+    (resolved by the cost-model autotuner in ``AggConfig.from_args``)."""
+    if value.strip().lower() == "auto":
+        return "auto"
+    try:
+        return int(value)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--bucket-bytes expects an integer byte count or 'auto', "
+            f"got {value!r}") from None
 
 
 def add_agg_args(parser: argparse.ArgumentParser, *,
@@ -193,10 +223,16 @@ def add_agg_args(parser: argparse.ArgumentParser, *,
         help="stream the aggregation through chunks of this many elements "
              "(bounds transient plane memory; 0 = whole-tensor)")
     g.add_argument(
-        "--bucket-bytes", type=int, default=0, metavar="N",
+        "--bucket-bytes", type=_bucket_bytes_flag, default=0, metavar="N",
         help="flatten the gradient pytree into fixed-size block-aligned wire "
              "buckets dispatched double-buffered (core/bucketer.py; "
-             "bit-identical to per-leaf; 0 = per-leaf tree_map)")
+             "bit-identical to per-leaf; 0 = per-leaf tree_map; 'auto' = "
+             "pick via the cost-model autotuner, see --autotune-trace)")
+    g.add_argument(
+        "--autotune-trace", default=None, metavar="PATH",
+        help="span trace (JSONL from --trace-out or repro.autotune.profile) "
+             "the '--bucket-bytes auto' cost model is fitted from; default "
+             "$REPRO_AUTOTUNE_TRACE")
     g.add_argument(
         "--agg-wire-bits", "--wire-bits", dest="agg_wire_bits", type=int,
         default=32, choices=[8, 16, 32],
@@ -480,9 +516,14 @@ class Aggregator:
     def allreduce(self, x: jax.Array) -> jax.Array:
         """Aggregate one array over the configured axes (leading
         logical-worker axis first when ``stacked``)."""
-        if self.stacked:
-            return _dispatch_stacked(x, self.axes, self.cfg)
-        return _dispatch(x, self.axes, self.cfg)
+        with _trace.span("agg.allreduce", strategy=self.spec.name,
+                         backend=self.backend, stacked=self.stacked) as sp:
+            if self.stacked:
+                out = _dispatch_stacked(x, self.axes, self.cfg)
+            else:
+                out = _dispatch(x, self.axes, self.cfg)
+            sp.sync(out)
+        return out
 
     def allreduce_tree(self, tree):
         """Aggregate every leaf of a gradient pytree.
@@ -493,11 +534,19 @@ class Aggregator:
         per-collective encode/decode overhead amortized over whole buckets.
         Otherwise: per-leaf tree_map (XLA's latency-hiding scheduler still
         overlaps the independent per-leaf collectives with other work)."""
-        if self.cfg.bucket_bytes:
-            from repro.core import bucketer
+        with _trace.span("agg.allreduce_tree", strategy=self.spec.name,
+                         backend=self.backend, stacked=self.stacked,
+                         bucket_bytes=self.cfg.bucket_bytes) as sp:
+            if self.cfg.bucket_bytes:
+                from repro.core import bucketer
 
-            if self.stacked:
-                return bucketer.bucketed_stacked_allreduce_tree(
-                    tree, self.axes, self.cfg)
-            return bucketer.bucketed_allreduce_tree(tree, self.axes, self.cfg)
-        return jax.tree_util.tree_map(self.allreduce, tree)
+                if self.stacked:
+                    out = bucketer.bucketed_stacked_allreduce_tree(
+                        tree, self.axes, self.cfg)
+                else:
+                    out = bucketer.bucketed_allreduce_tree(
+                        tree, self.axes, self.cfg)
+            else:
+                out = jax.tree_util.tree_map(self.allreduce, tree)
+            sp.sync(out)
+        return out

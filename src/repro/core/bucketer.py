@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import trace as _trace
 from repro.core import agg as _agg
 from repro.core.agg import AggConfig
 
@@ -209,20 +210,38 @@ def _stream_buckets(plan: BucketPlan, flat_leaves: dict, cfg: AggConfig,
 
     def land(entry):
         bucket, state, finish = entry
-        out = finish(state) if finish is not None else state
+        with _trace.span("bucketer.finish", phase="finish",
+                         bucket=bucket.index, elems=bucket.elems,
+                         group=bucket.group) as sp:
+            out = finish(state) if finish is not None else state
+            sp.sync(out)
         unpack_bucket(bucket, out, pieces)
 
     for bucket in plan.buckets:
-        buf = pack_fn(bucket, _stage_dtype(cfg, bucket.group))
         phases = phases_for(bucket)
         if phases is not None:
             encode, collect, finish = phases
-            state = encode(buf)
+            with _trace.span("bucketer.encode", phase="encode",
+                             bucket=bucket.index, elems=bucket.elems,
+                             group=bucket.group) as sp:
+                buf = pack_fn(bucket, _stage_dtype(cfg, bucket.group))
+                state = encode(buf)
+                sp.sync(state)
             if inflight is not None:
                 land(inflight)
-            inflight = (bucket, collect(state), finish)
+            with _trace.span("bucketer.collective", phase="collective",
+                             bucket=bucket.index, elems=bucket.elems,
+                             group=bucket.group) as sp:
+                collected = collect(state)
+                sp.sync(collected)
+            inflight = (bucket, collected, finish)
         else:
-            out = generic_fn(buf)
+            with _trace.span("bucketer.dispatch", phase="dispatch",
+                             bucket=bucket.index, elems=bucket.elems,
+                             group=bucket.group) as sp:
+                buf = pack_fn(bucket, _stage_dtype(cfg, bucket.group))
+                out = generic_fn(buf)
+                sp.sync(out)
             if inflight is not None:
                 land(inflight)
             inflight = (bucket, out, None)

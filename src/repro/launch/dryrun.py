@@ -7,8 +7,8 @@ extract roofline terms from the compiled artifact."""
 import argparse  # noqa: E402
 import json  # noqa: E402
 import re  # noqa: E402
-import time  # noqa: E402
 import traceback  # noqa: E402
+from time import perf_counter  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -17,6 +17,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.configs import SHAPES, get_config, shape_applicable, ARCH_NAMES  # noqa: E402
 from repro.configs.base import ShapeConfig  # noqa: E402
 from repro.core.agg import AggConfig, add_agg_args  # noqa: E402
+from repro.trace import add_trace_args  # noqa: E402
+from repro.trace import from_args as trace_from_args  # noqa: E402
 from repro.launch import hloscan  # noqa: E402
 from repro.launch import specs as S  # noqa: E402
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh  # noqa: E402
@@ -208,14 +210,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["status"] = "skipped"
         rec["reason"] = "long_500k requires sub-quadratic attention (see DESIGN.md)"
         return rec
-    t0 = time.time()
+    t0 = perf_counter()
     try:
         jax.sharding.set_mesh(mesh)  # enables in-model sharding hints
         fn, args = build_cell(arch, shape_name, mesh, agg, overrides)
         lowered = fn.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = perf_counter() - t0 - t_lower
 
         ma = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
@@ -273,6 +275,7 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     add_agg_args(ap)  # shared --agg-* flags (repro.core.agg); --wire-bits /
     #                   --pod-wire-bits / --agg kept as aliases
+    add_trace_args(ap)  # the shared --trace-* flags (repro.trace)
     ap.add_argument("--out", default=None, help="append JSON lines here")
     ap.add_argument("--save-hlo", default=None)
     ap.add_argument("--override", action="append", default=[],
@@ -295,15 +298,19 @@ def main():
         ap.error(str(e))
     archs = ARCH_NAMES if args.arch in (None, "all") else [args.arch]
     shapes = list(SHAPES) if args.shape in (None, "all") else [args.shape]
-    for arch in archs:
-        for shape in shapes:
-            rec = run_cell(arch, shape, args.multi_pod, agg,
-                           overrides or None, args.save_hlo)
-            line = json.dumps(rec)
-            print(line, flush=True)
-            if args.out:
-                with open(args.out, "a") as f:
-                    f.write(line + "\n")
+    session = trace_from_args(args)
+    try:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, args.multi_pod, agg,
+                               overrides or None, args.save_hlo)
+                line = json.dumps(rec)
+                print(line, flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(line + "\n")
+    finally:
+        session.finish()
 
 
 if __name__ == "__main__":

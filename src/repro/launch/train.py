@@ -8,7 +8,7 @@ Usage (CPU-scale example — see examples/train_lm.py for a driver):
 from __future__ import annotations
 
 import argparse
-import time
+from time import perf_counter
 
 import jax
 import numpy as np
@@ -16,6 +16,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, get_smoke_config
 from repro.core.agg import AggConfig, add_agg_args
+from repro.trace import add_trace_args
+from repro.trace import from_args as trace_from_args
 from repro.data.pipeline import ShardedLoader, SyntheticCorpus
 from repro.models.registry import build, param_count
 from repro.optim import optimizers
@@ -93,12 +95,12 @@ def train_loop(cfg, *, steps: int, global_batch: int, seq_len: int,
           f"mesh={dict(mesh.shape)}, agg={agg.strategy}")
     history = []
     for step in range(start_step, steps):
-        t0 = time.time()
+        t0 = perf_counter()
         batch = {"tokens": jax.device_put(
             loader.batch_at(step)["tokens"], NamedSharding(mesh, P(*bspec, None)))}
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         loss = float(metrics["loss"])
-        dt = time.time() - t0
+        dt = perf_counter() - t0
         health.heartbeat(0, dt)
         history.append(loss)
         if step % log_every == 0 or step == steps - 1:
@@ -121,6 +123,7 @@ def main():
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
     add_agg_args(ap)  # the shared --agg-* flags (repro.core.agg)
+    add_trace_args(ap)  # the shared --trace-* flags (repro.trace)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--fault-plan", default="",
@@ -140,21 +143,27 @@ def main():
         agg = AggConfig.from_args(args)
     except ValueError as e:
         ap.error(str(e))
-    if args.fault_plan or args.num_hosts:
-        if agg.chunk_elems:
-            ap.error("--agg-chunk is not supported on the elastic controller "
-                     "path (stacked aggregation; use --bucket-bytes instead)")
-        from repro.runtime.controller import run_controller
+    session = trace_from_args(args)
+    try:
+        if args.fault_plan or args.num_hosts:
+            if agg.chunk_elems:
+                ap.error("--agg-chunk is not supported on the elastic "
+                         "controller path (stacked aggregation; use "
+                         "--bucket-bytes instead)")
+            from repro.runtime.controller import run_controller
 
-        run_controller(cfg, steps=args.steps, global_batch=args.global_batch,
-                       seq_len=args.seq_len, agg=agg,
-                       num_hosts=args.num_hosts, ckpt_dir=args.ckpt_dir,
-                       ckpt_every=args.ckpt_every,
-                       fault_plan=args.fault_plan)
-        return
-    train_loop(cfg, steps=args.steps, global_batch=args.global_batch,
-               seq_len=args.seq_len, agg=agg,
-               ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+            run_controller(cfg, steps=args.steps,
+                           global_batch=args.global_batch,
+                           seq_len=args.seq_len, agg=agg,
+                           num_hosts=args.num_hosts, ckpt_dir=args.ckpt_dir,
+                           ckpt_every=args.ckpt_every,
+                           fault_plan=args.fault_plan)
+            return
+        train_loop(cfg, steps=args.steps, global_batch=args.global_batch,
+                   seq_len=args.seq_len, agg=agg,
+                   ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    finally:
+        session.finish()
 
 
 if __name__ == "__main__":

@@ -56,6 +56,7 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import switchsim
+from repro import trace as _trace
 from repro.core.agg import AggConfig, Aggregator
 from repro.data.pipeline import ShardedLoader, SyntheticCorpus, reassign_shard
 from repro.models.registry import build, param_count
@@ -368,7 +369,7 @@ class ElasticController:
         ckpt.save_bundle(self.ckpt_dir, 0,
                          {"params": self.params, "opt": self.opt_state})
         step = 0
-        wall0 = time.time()
+        wall0 = time.perf_counter()
         while step < self.steps:
             for ev in self.fault_plan:
                 if ev.step == step:
@@ -380,14 +381,17 @@ class ElasticController:
                     elif ev.kind == "slow":
                         self._slow[ev.host] = ev.factor
 
-            t0 = time.time()
-            tokens = jax.device_put(
-                self._global_tokens(step),
-                NamedSharding(self.mesh, P(*self._bspec, None)))
-            self.params, self.opt_state, metrics = self.step_fn(
-                self.params, self.opt_state, {"tokens": tokens})
-            loss = float(metrics["loss"])
-            dt = time.time() - t0
+            t0 = time.perf_counter()
+            with _trace.span("controller.step", phase="step", step=step,
+                             mesh=len(self.mesh_hosts)) as sp:
+                tokens = jax.device_put(
+                    self._global_tokens(step),
+                    NamedSharding(self.mesh, P(*self._bspec, None)))
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, {"tokens": tokens})
+                loss = float(metrics["loss"])  # blocks: device step lands here
+                sp.sync(metrics)
+            dt = time.perf_counter() - t0
 
             if self.strict_replay and step in history:
                 assert history[step] == loss, (
@@ -429,7 +433,8 @@ class ElasticController:
                                  {"params": self.params, "opt": self.opt_state},
                                  {"loss": loss})
         print(f"[controller] done: {self.steps} steps in "
-              f"{time.time() - wall0:.1f}s, {len(self.recoveries)} recoveries, "
+              f"{time.perf_counter() - wall0:.1f}s, "
+              f"{len(self.recoveries)} recoveries, "
               f"{self._reclaimed_total} switch slots reclaimed")
         return {
             "history": [history[s] for s in range(self.steps)],
@@ -444,26 +449,35 @@ class ElasticController:
 
     def _recover(self, dead: list[int], step: int) -> int:
         """Full recovery path after declared deaths; returns the next step."""
-        # 1. switch-side: drain the in-flight window with the failure live —
-        #    the dead ports' slots are reclaimed and survivors resubmit from
-        #    shadow copies; completing proves no slot stays parked.
-        stats = dict(self.switch.stats)
-        for h in dead:
-            if h in self.mesh_hosts:
-                stats = self._switch_step(step, fail_port=self.mesh_hosts.index(h))
-        reclaimed = stats["reclaimed"]
-        self._reclaimed_total += reclaimed
+        with _trace.span("controller.recover", phase="recover", step=step,
+                         dead=list(dead)):
+            # 1. switch-side: drain the in-flight window with the failure
+            #    live — the dead ports' slots are reclaimed and survivors
+            #    resubmit from shadow copies; completing proves no slot
+            #    stays parked.
+            with _trace.span("recover.drain_switch", phase="recover"):
+                stats = dict(self.switch.stats)
+                for h in dead:
+                    if h in self.mesh_hosts:
+                        stats = self._switch_step(
+                            step, fail_port=self.mesh_hosts.index(h))
+            reclaimed = stats["reclaimed"]
+            self._reclaimed_total += reclaimed
 
-        # 2. the dead hosts' contributions stop at their last heartbeat:
-        #    anything newer (including checkpoints) is tainted.
-        last_good = min(self._last_beat_step[h] for h in dead)
-        survivors = sorted(h for h, s in self.health.hosts.items() if s.alive)
-        if not survivors:
-            raise RuntimeError("all hosts dead; nothing to recover onto")
+            # 2. the dead hosts' contributions stop at their last heartbeat:
+            #    anything newer (including checkpoints) is tainted.
+            last_good = min(self._last_beat_step[h] for h in dead)
+            survivors = sorted(
+                h for h, s in self.health.hosts.items() if s.alive)
+            if not survivors:
+                raise RuntimeError("all hosts dead; nothing to recover onto")
 
-        # 3. re-mesh the survivors + elastic restore of the newest clean bundle
-        resumed_from = self._remesh(survivors, restore=True,
-                                    max_step=last_good + 1)
+            # 3. re-mesh the survivors + elastic restore of the newest clean
+            #    bundle
+            with _trace.span("recover.restore", phase="recover") as sp:
+                resumed_from = self._remesh(survivors, restore=True,
+                                            max_step=last_good + 1)
+                sp.sync(self.params)
         report = RecoveryReport(
             detected_at_step=step, dead=list(dead),
             last_good_step=last_good, resumed_from=resumed_from,
@@ -480,9 +494,11 @@ class ElasticController:
     def _grow(self, alive: list[int], step: int) -> int:
         """Scale back up onto revived hosts: checkpoint current state, then
         re-mesh + restore (no replay needed — the state is clean)."""
-        ckpt.save_bundle(self.ckpt_dir, step + 1,
-                         {"params": self.params, "opt": self.opt_state})
-        resumed_from = self._remesh(alive, restore=True)
+        with _trace.span("controller.grow", phase="recover", step=step) as sp:
+            ckpt.save_bundle(self.ckpt_dir, step + 1,
+                             {"params": self.params, "opt": self.opt_state})
+            resumed_from = self._remesh(alive, restore=True)
+            sp.sync(self.params)
         print(f"[controller] GROW mesh={self.mesh_hosts} resume@{resumed_from}")
         return resumed_from
 

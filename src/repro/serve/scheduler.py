@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import trace as _trace
 from repro.core.agg import AggConfig
 from repro.serve.engine import Request, Result, TelemetryChannel
 from repro.serve.kvcache import PagedKVCache, pages_needed
@@ -339,10 +340,13 @@ class ContinuousEngine:
             rows.append(slot)
             pages.extend(self.cache.slot_pages(slot)[:npg])
         cache = self.model.init_cache(n, plen)
-        first, self.cache.k, self.cache.v, self._next = self._prefill(
-            self.params, jnp.asarray(toks), cache, self.cache.k, self.cache.v,
-            jnp.asarray(np.asarray(pages, np.int32)), self._next,
-            jnp.asarray(np.asarray(rows, np.int32)))
+        with _trace.span("serve.prefill", phase="prefill", n=n,
+                         plen=plen, elems=n * plen) as sp:
+            first, self.cache.k, self.cache.v, self._next = self._prefill(
+                self.params, jnp.asarray(toks), cache, self.cache.k,
+                self.cache.v, jnp.asarray(np.asarray(pages, np.int32)),
+                self._next, jnp.asarray(np.asarray(rows, np.int32)))
+            sp.sync(first)
         sid = self._sid
         self._sid += 1
         self._hist[sid] = first
@@ -382,9 +386,12 @@ class ContinuousEngine:
             ok = self.cache.grow_slot(i, s.cache_len + 1)
             assert ok, "reservation accounting must cover decode growth"
             lens[i] = s.cache_len
-        self._next, self.cache.k, self.cache.v = self._decode(
-            self.params, self._next, self.cache.k, self.cache.v,
-            self.cache.device_table(), jnp.asarray(lens))
+        with _trace.span("serve.decode", phase="decode",
+                         active=len(active)) as sp:
+            self._next, self.cache.k, self.cache.v = self._decode(
+                self.params, self._next, self.cache.k, self.cache.v,
+                self.cache.device_table(), jnp.asarray(lens))
+            sp.sync(self._next)
         sid = self._sid
         self._sid += 1
         self._hist[sid] = self._next

@@ -122,6 +122,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import trace as _trace
 from repro.core import fpisa
 # the shared mirror contract — defined once in the package root (see the
 # repro.switchsim module doc); re-exported here for legacy callers that
@@ -833,8 +834,35 @@ def run_aggregation(
     out = np.zeros((nchunks, e), np.float32)
     have_result = np.zeros((w, nchunks), bool)
     arrivals: dict[int, list[int]] = {}
-    reclaim_at: int | None = None
 
+    sp = _trace.span("switchsim.run_aggregation", phase="switch",
+                     workers=w, nchunks=nchunks, job=job,
+                     batched=batched, drop_prob=drop_prob)
+    with sp:
+        rnd = _drive_rounds(
+            switch, vecs3, out, have_result, arrivals, rng,
+            drop_prob=drop_prob, max_rounds=max_rounds, window=window,
+            record_arrivals=record_arrivals, fail_worker=fail_worker,
+            fail_round=fail_round, detect_rounds=detect_rounds,
+            chunk_base=chunk_base, job=job, now_base=now_base,
+            batched=batched)
+        if sp:
+            sp.tag(rounds=rnd + 1)
+    switch.last_now = now_base + rnd  # staleness clock for the next caller
+    flat = out.reshape(-1)[:n]
+    if record_arrivals:
+        return flat, arrivals
+    return flat
+
+
+def _drive_rounds(switch, vecs3, out, have_result, arrivals, rng, *,
+                  drop_prob, max_rounds, window, record_arrivals,
+                  fail_worker, fail_round, detect_rounds, chunk_base, job,
+                  now_base, batched):
+    """The round-synchronous loop of ``run_aggregation`` (same RNG stream,
+    split out so the driver's trace span wraps exactly the wire time)."""
+    w, nchunks, e = vecs3.shape
+    reclaim_at: int | None = None
     for rnd in range(max_rounds):
         if fail_round is not None and rnd == fail_round and fail_worker is not None:
             # the worker crashes: it stops sending and is owed no delivery
@@ -885,8 +913,4 @@ def run_aggregation(
                 have_result[miss[ok], c] = True
     if not have_result.all():
         raise RuntimeError("aggregation did not complete within max_rounds")
-    switch.last_now = now_base + rnd  # staleness clock for the next caller
-    flat = out.reshape(-1)[:n]
-    if record_arrivals:
-        return flat, arrivals
-    return flat
+    return rnd

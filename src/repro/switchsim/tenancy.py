@@ -41,6 +41,7 @@ import threading
 
 import numpy as np
 
+from repro import trace as _trace
 from repro.switchsim.dataplane import (
     DataplaneConfig,
     NumpyDataplane,
@@ -109,6 +110,31 @@ def run_multitenant(
     rng = np.random.default_rng(seed)
     done_round: list[int | None] = [None] * jn
 
+    sp = _trace.span("switchsim.run_multitenant", phase="switch",
+                     num_jobs=jn, drop_prob=drop_prob)
+    rnd = 0
+    with sp:
+        rnd = _drive_tenant_rounds(
+            switch, cfg, vecs3, out, have, got, done_round, rng,
+            drop_prob=drop_prob, max_rounds=max_rounds,
+            chunk_base=chunk_base, now_base=now_base)
+        if sp:
+            sp.tag(rounds=rnd)
+    switch.last_now = now_base + rnd
+    flats = [out[j].reshape(-1)[: nlens[j]] for j in range(jn)]
+    report = {
+        "rounds": rnd,
+        "done_round": done_round,
+        "job_stats": getattr(switch, "job_stats", None),
+    }
+    return flats, report
+
+
+def _drive_tenant_rounds(switch, cfg, vecs3, out, have, got, done_round, rng,
+                         *, drop_prob, max_rounds, chunk_base, now_base):
+    """The round loop of ``run_multitenant`` (identical RNG stream; split
+    out so the driver's trace span wraps exactly the shared-fabric time)."""
+    jn = cfg.num_jobs
     rnd = 0
     for rnd in range(max_rounds):
         if all(h.all() for h in have):
@@ -164,14 +190,7 @@ def run_multitenant(
     if not all(h.all() for h in have):
         raise RuntimeError("multi-tenant aggregation did not complete "
                            "within max_rounds")
-    switch.last_now = now_base + rnd
-    flats = [out[j].reshape(-1)[: nlens[j]] for j in range(jn)]
-    report = {
-        "rounds": rnd,
-        "done_round": done_round,
-        "job_stats": getattr(switch, "job_stats", None),
-    }
-    return flats, report
+    return rnd
 
 
 # ---------------------------------------------------------------------------

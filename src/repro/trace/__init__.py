@@ -1,0 +1,25 @@
+"""Span tracing for the aggregation pipeline (DESIGN.md §13).
+
+Hot-path API (near-zero when disabled)::
+
+    from repro import trace
+
+    with trace.span("bucketer.encode", bucket=i, phase="encode") as sp:
+        state = encode(buf)
+        sp.sync(state)      # block_until_ready -> device work lands here
+
+Control/export API::
+
+    trace.enable(); ... ; trace.export.write_jsonl(trace.get(), path)
+
+CLI threading: ``trace.add_trace_args(parser)`` + ``trace.from_args(ns)``.
+"""
+from repro.trace import export  # noqa: F401
+from repro.trace.cli import TraceSession, add_trace_args, from_args  # noqa: F401
+from repro.trace.export import (  # noqa: F401
+    read_jsonl, to_chrome, write_chrome, write_jsonl,
+)
+from repro.trace.tracer import (  # noqa: F401
+    NULL_SPAN, SCHEMA_VERSION, Span, Tracer, disable, enable, enabled, get,
+    span,
+)

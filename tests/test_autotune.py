@@ -1,0 +1,255 @@
+"""Cost-model autotuner contract (src/repro/autotune, DESIGN.md §13):
+the affine fit recovers planted coefficients from synthetic traces, the
+bucket-plan search picks a planted optimum, ``--bucket-bytes auto``
+resolves through ``AggConfig.from_args`` (and falls back LOUDLY with no
+trace), and the tuned plan stays bit-identical to the default — tuning
+may only ever change the schedule, never the bits."""
+import argparse
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.autotune import costmodel, profile, search
+from repro.core.agg import AggConfig, add_agg_args
+from repro.trace import export
+
+# planted model: cheap fixed cost, collective dominated by per-element wire
+# time -> overlapping it with encode/finish pays, so an INTERIOR bucket size
+# beats both per-leaf (fixed cost x many buckets) and one giant bucket (no
+# overlap).  All costs exact-affine, so the fit must recover them exactly.
+PLANTED = {
+    "encode": costmodel.PhaseCost(a=5e-6, b=4e-9),
+    "collective": costmodel.PhaseCost(a=5e-6, b=10e-9),
+    "finish": costmodel.PhaseCost(a=5e-6, b=4e-9),
+}
+
+
+def planted_spans(sizes=(1024, 4096, 16384, 65536), reps=2):
+    spans = []
+    for n in sizes:
+        for phase, cost in PLANTED.items():
+            for _ in range(reps):
+                spans.append({
+                    "name": "autotune.probe", "id": len(spans), "parent": -1,
+                    "depth": 0, "tid": 0, "ts": 0.0, "dur": cost(n),
+                    "synced": True,
+                    "tags": {"phase": phase, "elems": n},
+                })
+    return spans
+
+
+def write_trace(path, spans):
+    with open(path, "w") as f:
+        f.write(json.dumps(export.header()) + "\n")
+        for sp in spans:
+            f.write(json.dumps(sp) + "\n")
+    return str(path)
+
+
+# leaves totalling 256 KiB: 64 x 1024-elem f32 -> candidates
+# (0, 64KiB, 128KiB, 256KiB); under PLANTED the 64 KiB cut wins
+LEAVES = [jax.ShapeDtypeStruct((1024,), jnp.float32) for _ in range(64)]
+PLANTED_BEST = 64 << 10
+
+
+# ---------------------------------------------------------------------------
+# fit
+# ---------------------------------------------------------------------------
+
+
+def test_fit_recovers_planted_coefficients():
+    model = costmodel.fit(planted_spans())
+    for phase, cost in PLANTED.items():
+        got = model.phases[phase]
+        assert got.a == pytest.approx(cost.a, rel=1e-6)
+        assert got.b == pytest.approx(cost.b, rel=1e-6)
+        assert model.samples[phase] == 8
+
+
+def test_fit_rejects_single_size_and_unsynced():
+    with pytest.raises(ValueError, match="2 distinct"):
+        costmodel.fit(planted_spans(sizes=(4096,)))
+    spans = planted_spans()
+    for sp in spans:
+        sp["synced"] = False
+    with pytest.raises(ValueError, match="2 distinct"):
+        costmodel.fit(spans)
+
+
+def test_fit_clamps_negative_coefficients():
+    spans = [{"name": "p", "id": i, "parent": -1, "depth": 0, "tid": 0,
+              "ts": 0.0, "dur": d, "synced": True,
+              "tags": {"phase": ph, "elems": n}}
+             for i, (ph, n, d) in enumerate(
+                 # decreasing time with size -> raw slope negative
+                 [(ph, n, 1e-3 / k) for ph in costmodel.PHASES
+                  for k, n in enumerate((256, 4096), start=1)])]
+    model = costmodel.fit(spans)
+    for ph in costmodel.PHASES:
+        assert model.phases[ph].b == 0.0
+
+
+def test_pipeline_time_recurrence():
+    model = costmodel.CostModel(phases=PLANTED)
+    enc, col, fin = (PLANTED["encode"], PLANTED["collective"],
+                     PLANTED["finish"])
+    sizes = [1000, 2000, 3000]
+    expect = enc(1000)
+    expect += max(col(1000), enc(2000))
+    expect += max(col(2000), enc(3000) + fin(1000))
+    expect += max(col(3000), fin(2000))
+    expect += fin(3000)
+    assert model.pipeline_time(sizes) == pytest.approx(expect)
+    assert model.pipeline_time([]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# search
+# ---------------------------------------------------------------------------
+
+
+def test_candidates_sweep_and_dedup():
+    cands = search.candidate_bucket_bytes(256 << 10)
+    assert cands[0] == 0
+    assert (64 << 10) in cands and (256 << 10) in cands
+    assert len(set(cands)) == len(cands)
+    # workload smaller than lo: just (0, lo)
+    assert search.candidate_bucket_bytes(1000) == (0, 1 << 16)
+
+
+def test_plan_sizes_per_leaf_pads_and_skips_non_float():
+    leaves = [jax.ShapeDtypeStruct((777,), jnp.float32),
+              jax.ShapeDtypeStruct((8,), jnp.int32),
+              jax.ShapeDtypeStruct((512,), jnp.float32)]
+    sizes = search.plan_sizes(leaves, block=256, bucket_bytes=0)
+    # reverse-flatten dispatch order, block-padded, ints dropped
+    assert sizes == [512, 1024]
+
+
+def test_search_picks_planted_optimum():
+    model = costmodel.fit(planted_spans())
+    best, scores = search.choose_bucket_bytes(model, LEAVES, block=256)
+    assert best == PLANTED_BEST
+    assert scores[best] == min(scores.values())
+    assert set(scores) == {0, 64 << 10, 128 << 10, 256 << 10}
+
+
+def test_auto_from_trace_file(tmp_path):
+    path = write_trace(tmp_path / "t.jsonl", planted_spans())
+    got = search.auto_bucket_bytes(trace_path=path, block=256, leaves=LEAVES)
+    assert got == PLANTED_BEST
+
+
+def test_auto_env_var(tmp_path, monkeypatch):
+    path = write_trace(tmp_path / "t.jsonl", planted_spans())
+    monkeypatch.setenv(search.TRACE_ENV, path)
+    got = search.auto_bucket_bytes(block=256, leaves=LEAVES)
+    assert got == PLANTED_BEST
+
+
+def test_auto_without_trace_falls_back_loudly(tmp_path, monkeypatch):
+    monkeypatch.delenv(search.TRACE_ENV, raising=False)
+    with pytest.warns(UserWarning, match="falling back"):
+        got = search.auto_bucket_bytes()
+    assert got == search.DEFAULT_AUTO_BUCKET_BYTES
+    with pytest.warns(UserWarning, match="missing file"):
+        got = search.auto_bucket_bytes(trace_path=str(tmp_path / "no.jsonl"))
+    assert got == search.DEFAULT_AUTO_BUCKET_BYTES
+
+
+# ---------------------------------------------------------------------------
+# --bucket-bytes auto through the shared CLI surface
+# ---------------------------------------------------------------------------
+
+
+def _parse(argv):
+    ap = argparse.ArgumentParser()
+    add_agg_args(ap)
+    return ap.parse_args(argv)
+
+
+def test_from_args_plain_int_unchanged():
+    cfg = AggConfig.from_args(_parse(["--bucket-bytes", "4096"]))
+    assert cfg.bucket_bytes == 4096
+
+
+def test_from_args_auto_with_trace(tmp_path, monkeypatch):
+    monkeypatch.delenv(search.TRACE_ENV, raising=False)
+    path = write_trace(tmp_path / "t.jsonl", planted_spans())
+    cfg = AggConfig.from_args(_parse(
+        ["--bucket-bytes", "auto", "--autotune-trace", path]))
+    # resolved against the synthetic reference workload: a concrete plan,
+    # never the sentinel
+    assert isinstance(cfg.bucket_bytes, int) and cfg.bucket_bytes >= 0
+
+
+def test_from_args_auto_without_trace_warns(monkeypatch):
+    monkeypatch.delenv(search.TRACE_ENV, raising=False)
+    with pytest.warns(UserWarning, match="falling back"):
+        cfg = AggConfig.from_args(_parse(["--bucket-bytes", "auto"]))
+    assert cfg.bucket_bytes == search.DEFAULT_AUTO_BUCKET_BYTES
+
+
+def test_bucket_bytes_flag_rejects_garbage():
+    with pytest.raises(SystemExit):
+        _parse(["--bucket-bytes", "lots"])
+
+
+# ---------------------------------------------------------------------------
+# replay profiler end-to-end + the tuning-never-changes-bits contract
+# ---------------------------------------------------------------------------
+
+
+def test_profile_phases_feed_the_fit():
+    cfg = AggConfig(strategy="fpisa", backend="jnp")
+    spans = profile.profile_phases(cfg, sizes=(256, 1024), iters=2, warmup=1)
+    assert len(spans) == 2 * 2 * 3
+    assert all(sp["synced"] for sp in spans)
+    model = costmodel.fit(spans)
+    assert set(model.phases) == set(costmodel.PHASES)
+    for ph in costmodel.PHASES:  # real measurements: nonneg, finite
+        c = model.phases[ph]
+        assert c.a >= 0 and c.b >= 0 and np.isfinite(c.a + c.b)
+
+
+def test_profile_rejects_non_split_phase_strategy():
+    with pytest.raises(ValueError, match="split-phase"):
+        profile.profile_phases(AggConfig(strategy="native", backend="jnp"),
+                               sizes=(256,))
+
+
+def test_tuned_plan_is_bit_identical_to_default(tmp_path):
+    """Whatever the tuner picks, the result bits match the default plan —
+    the bucketer parity contract the search relies on."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.core.agg import Aggregator
+
+    rng = np.random.default_rng(3)
+    tree = {f"l{i}": jnp.asarray((rng.standard_normal(n) * 0.01)
+                                 .astype(np.float32))
+            for i, n in enumerate((2048, 777, 4096, 13))}
+    path = write_trace(tmp_path / "t.jsonl", planted_spans())
+    tuned = search.auto_bucket_bytes(
+        trace_path=path, block=256,
+        leaves=[jax.ShapeDtypeStruct(v.shape, v.dtype)
+                for v in tree.values()])
+    mesh = compat.make_mesh((jax.device_count(),), ("data",))
+
+    def run(bucket_bytes):
+        agg = Aggregator(AggConfig(strategy="fpisa", backend="jnp",
+                                   bucket_bytes=bucket_bytes), ("data",))
+        return jax.jit(compat.shard_map(
+            agg.allreduce_tree, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P(), tree),),
+            out_specs=jax.tree.map(lambda _: P(), tree),
+            check_vma=False))(tree)
+
+    a, b = run(0), run(tuned)
+    for k in tree:
+        assert jnp.all(a[k].view(jnp.int32) == b[k].view(jnp.int32)), k

@@ -25,6 +25,7 @@ MODULES = [
     "fig_serve",
     "tab3_resource_util",
     "roofline",
+    "fig_autotune",
 ]
 
 # BENCH_<name>.json -> {top-level results key: [required subkeys]}
@@ -77,6 +78,15 @@ SCHEMAS = {
         "comparison": ["goodput_ratio", "goodput_target", "goodput_ok",
                        "kv_pages_peak_tokens", "dense_cache_tokens",
                        "paged_lt_dense", "bit_identical"],
+    },
+    "autotune": {
+        "workload": ["n_layers", "n_leaves", "n_elems"],
+        "profile": ["probe_sizes", "n_spans", "trace_path"],
+        "model": ["phases", "samples"],
+        "search": ["tuned_bucket_bytes", "default_bucket_bytes",
+                   "predicted_us"],
+        "comparison": ["default_us", "tuned_us", "speedup", "no_worse",
+                       "bit_identical"],
     },
     "contention": {
         "config": ["num_jobs", "num_slots", "drop_prob", "priorities",
@@ -138,6 +148,12 @@ def test_benchmark_suite_smoke(tmp_path):
     assert rec["switch"]["completed"] is True
     assert rec["switch"]["reclaimed"] > 0
     assert rec["training"]["bit_identical"] is True
+    # the ISSUE-10 autotuner invariants hold at smoke size: the tuned plan
+    # is bit-identical to the default and measurably no worse (5% slack)
+    at = json.loads((tmp_path / "BENCH_autotune.json").read_text())["results"]
+    assert at["comparison"]["bit_identical"] is True
+    assert at["comparison"]["no_worse"] is True
+    assert at["search"]["tuned_bucket_bytes"] >= 0
     assert rec["training"]["reclaimed"] > 0
     # the ISSUE-6 tenancy invariants hold at smoke size: every tenant of the
     # shared switch completed, and the query stream's group sums carry only

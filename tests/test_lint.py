@@ -310,6 +310,67 @@ def test_rng_discipline_negative_generator(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# timing-discipline — perf_counter + context-manager spans on phase paths
+# ---------------------------------------------------------------------------
+
+
+def test_timing_discipline_positive(tmp_path):
+    write_tree(tmp_path, {"benchmarks/bad_bench.py": """\
+        import time
+        from time import time as now
+        from repro import trace
+
+        def run(fn):
+            t0 = time.time()
+            fn()
+            dt = now() - t0
+            sp = trace.span("bench.step")
+            sp.start()
+            fn()
+            sp.end()
+            trace.span("chained").start()
+            return dt
+    """})
+    res = lint(tmp_path, "benchmarks", rules=["timing-discipline"])
+    assert at(res, "timing-discipline", "benchmarks/bad_bench.py", 6)
+    assert at(res, "timing-discipline", "benchmarks/bad_bench.py", 8)
+    assert at(res, "timing-discipline", "benchmarks/bad_bench.py", 10)
+    assert at(res, "timing-discipline", "benchmarks/bad_bench.py", 13)
+    assert len(res.findings) == 4
+
+
+def test_timing_discipline_negative_clean_and_scope(tmp_path):
+    write_tree(tmp_path, {
+        # idiomatic: perf_counter + context-manager spans; thread.start() and
+        # span-as-context-manager must not fire
+        "src/repro/serve/sched.py": """\
+            import threading
+            from time import perf_counter
+
+            from repro import trace
+
+            def step(fn):
+                t0 = perf_counter()
+                with trace.span("serve.decode", phase="decode") as sp:
+                    out = fn()
+                    sp.sync(out)
+                t = threading.Thread(target=fn)
+                t.start()
+                return perf_counter() - t0
+        """,
+        # out of scope: wall-clock in a data pipeline is not a phase path
+        "src/repro/data/loader.py": """\
+            import time
+
+            def stamp():
+                return time.time()
+        """,
+    })
+    res = lint(tmp_path, "src", rules=["timing-discipline"])
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
 # mirror-parity — the three-way dataplane / numpy-mirror contract
 # ---------------------------------------------------------------------------
 

@@ -452,3 +452,67 @@ def rng_discipline(mod: ModuleInfo, project: Project) -> Iterator[Finding]:
             f"np.random.{fn}() draws from numpy's hidden global RNG state; "
             f"create np.random.default_rng(seed) and pass the Generator "
             f"down so runs are reproducible across processes")
+
+
+# ---------------------------------------------------------------------------
+# TIMING-DISCIPLINE — every measurement on an instrumented phase path goes
+# through time.perf_counter (monotonic, high-resolution) and every tracer
+# span is a context manager. time.time() is wall-clock: NTP slews it and its
+# resolution is platform-dependent, so durations computed from it are not
+# trustworthy autotuner input; a bare Span.start() with a forgotten end
+# corrupts the tracer's nesting stack (PR 10's contract, DESIGN.md §13).
+# ---------------------------------------------------------------------------
+
+_TIMING_SCOPE = (
+    "src/repro/trace/*", "src/repro/autotune/*", "benchmarks/*",
+    "src/repro/core/agg.py", "src/repro/core/bucketer.py",
+    "src/repro/switchsim/*", "src/repro/serve/*", "src/repro/launch/*",
+    "src/repro/runtime/controller.py",
+)
+# the tracer defines Span.start/.end — the one legitimate caller
+_TIMING_IMPL = "src/repro/trace/tracer.py"
+
+
+def _span_receiver(func: ast.Attribute) -> bool:
+    """Heuristic: is ``<recv>.start()``'s receiver a tracer span?  True for
+    a chained ``span(...).start()`` and for names that read like a span
+    (``sp``, ``span``, ``outer_span`` …) — conservative enough to leave
+    ``thread.start()`` / ``proc.start()`` alone."""
+    recv = func.value
+    if isinstance(recv, ast.Call):
+        q = dotted(recv.func)
+        return bool(q) and q.split(".")[-1] in ("span", "Span")
+    name = dotted(recv)
+    if not name:
+        return False
+    last = name.split(".")[-1].lower()
+    return last == "sp" or "span" in last
+
+
+@register_rule(
+    "timing-discipline",
+    scope=_TIMING_SCOPE,
+    description="no time.time() on instrumented phase paths (perf_counter / "
+                "benchmarks.common.timed) and no bare Span.start() — spans "
+                "are context managers")
+def timing_discipline(mod: ModuleInfo, project: Project) -> Iterator[Finding]:
+    imports = ImportMap(mod.tree)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        q = imports.qualified(node.func)
+        if q == "time.time":
+            yield Finding(
+                "timing-discipline", mod.rel, node.lineno, node.col_offset,
+                "time.time() is wall-clock (NTP-slewed, platform-resolution) "
+                "— durations from it are not valid span/autotuner input; use "
+                "time.perf_counter() or benchmarks.common.timed()")
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "start" and not node.args \
+                and not node.keywords and mod.rel != _TIMING_IMPL \
+                and _span_receiver(node.func):
+            yield Finding(
+                "timing-discipline", mod.rel, node.lineno, node.col_offset,
+                "bare Span.start() — a forgotten end() corrupts the "
+                "tracer's nesting stack; use the context-manager form "
+                "'with trace.span(...) as sp:'")
